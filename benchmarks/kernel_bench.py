@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: jitted oracle throughput on CPU + Pallas
+(interpret) correctness spot-check per shape. Wall-times on this host are
+CPU numbers; the TPU story is in the roofline analysis."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.intersect.ref import intersect_mask_ref
+from repro.kernels.proximity.ref import proximity_join_ref
+
+
+def _timeit(fn, *args, reps=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    jit_int = jax.jit(intersect_mask_ref)
+    jit_prox = jax.jit(lambda a, b: proximity_join_ref(a, b, 5))
+    jit_bag = jax.jit(embedding_bag_ref)
+    for n, m in ((16_384, 65_536), (131_072, 1_048_576)):
+        a = jnp.asarray(np.unique(rng.integers(0, 4 * m, n)).astype(np.int32))
+        b = jnp.asarray(np.unique(rng.integers(0, 4 * m, m)).astype(np.int32))
+        dt = _timeit(jit_int, a, b)
+        rows.append((f"kernel/intersect_ref_{n}x{m}", dt * 1e6,
+                     f"postings_per_s={(n + m) / dt:.3e}"))
+        dt = _timeit(jit_prox, a, b)
+        rows.append((f"kernel/proximity_ref_{n}x{m}", dt * 1e6,
+                     f"postings_per_s={(n + m) / dt:.3e}"))
+    for B, S, V, D in ((4096, 50, 100_000, 64),):
+        ids = jnp.asarray(rng.integers(-1, V, (B, S)).astype(np.int32))
+        tbl = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+        dt = _timeit(jit_bag, ids, tbl)
+        rows.append((f"kernel/embedding_bag_ref_B{B}", dt * 1e6,
+                     f"lookups_per_s={B * S / dt:.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,62 @@
+"""Benchmark harness — one section per paper table/figure plus kernel and
+serving micro-benches. Prints ``name,us_per_call,derived`` CSV.
+
+Sections:
+  search/*    — the paper's Idx1 vs Idx2/3/4 experiment (Figs. 6-9);
+  equalize/*  — §2.3 heap vs basic Equalize scaling;
+  kernel/*    — posting-intersection / proximity / embedding-bag ops;
+  serve/*     — compiled QT1 serve-step latency per bucket.
+
+Quick mode (default) uses a reduced corpus; --full matches the corpus
+scale used in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="EXPERIMENTS.md-scale corpus")
+    ap.add_argument("--only", default=None, help="comma-separated section filter")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    rows: list[tuple] = []
+
+    def want(section: str) -> bool:
+        return only is None or section in only
+
+    if want("search"):
+        from benchmarks import paper_experiments
+
+        if args.full:
+            rep = paper_experiments.run()
+        else:
+            rep = paper_experiments.run(n_docs=1200, mean_doc_len=140, n_queries=150,
+                                        out_json="results/paper_experiments_quick.json")
+        rows += paper_experiments.rows(rep)
+
+    if want("equalize"):
+        from benchmarks import equalize_scaling
+
+        rows += equalize_scaling.run()
+
+    if want("kernel"):
+        from benchmarks import kernel_bench
+
+        rows += kernel_bench.run()
+
+    if want("serve"):
+        from benchmarks import serve_bench
+
+        rows += serve_bench.run()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

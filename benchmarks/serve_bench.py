@@ -1,0 +1,45 @@
+"""Compiled QT1 serve-step throughput (single host device): the compiled
+per-bucket latency IS the response-time guarantee (DESIGN.md §3)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core.index_builder import build_index
+from repro.core.jax_search import make_qt1_serve_step, pack_qt1_batch
+from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.launch.mesh import make_mesh
+
+
+def run():
+    rows = []
+    table, lex = generate_corpus(n_docs=1500, mean_doc_len=150, vocab_size=20_000, seed=3)
+    idx = build_index(table, lex, max_distance=5)
+    queries = sample_stop_queries(table, lex, 64, window=3, seed=5)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    step = make_qt1_serve_step(mesh, top_k=16)
+    for B, L in ((16, 4096), (64, 4096), (64, 16384)):
+        qs = (queries * ((B // len(queries)) + 1))[:B]
+        batch = pack_qt1_batch(idx, qs, L=L, K=2)
+        args = batch.device_args()
+        out = step(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        reps = 10
+        for _ in range(reps):
+            out = step(*args)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((
+            f"serve/qt1_B{B}_L{L}", dt * 1e6,
+            f"queries_per_s={B / dt:.1f};postings_per_s={B * 2 * L / dt:.3e}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

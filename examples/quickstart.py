@@ -1,0 +1,48 @@
+"""Quickstart: build a proximity index over real text and run the paper's
+worked example query "who are you who" end to end (Table 1 pipeline:
+lemmatization -> sub-queries -> (f,s,t) evaluation -> combined ranking).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.index_builder import build_index
+from repro.core.lemmatizer import lemmatize_text
+from repro.core.lexicon import Lexicon
+from repro.core.search import ProximitySearchEngine
+from repro.data.corpus import TokenTable
+
+DOCS = [
+    "All was fresh around them, familiar and yet new, tinged with the beauty",
+    "Who are you who said the stranger in the pale morning light",
+    "The Who are an English rock band and Who are You is one of their songs",
+    "You said that you are the one who was around these familiar places",
+    "It was fresh and new, and the beauty of it was plain to all of them",
+    "Are you the one? said the man. Who are you? You know who we are.",
+] * 5  # small corpus; repetition stabilizes the FL-list
+
+
+def main() -> None:
+    lemmatized = [lemmatize_text(t) for t in DOCS]
+    lexicon = Lexicon.build(lemmatized, sw_count=10, fu_count=8)
+    print(f"lexicon: {lexicon.n_lemmas} lemmas over {lexicon.n_docs} docs")
+    print("top of the FL-list:", lexicon.lemmas[:10])
+
+    docs_ids = [[[lexicon.fl(a) for a in alts] for alts in doc] for doc in lemmatized]
+    table = TokenTable.from_lemmatized(docs_ids)
+    index = build_index(table, lexicon, max_distance=5)
+    print("index:", index.size_report())
+
+    engine = ProximitySearchEngine(index, top_k=10)
+    for query in ("who are you who", "fresh and new", "the beauty of the morning"):
+        results, stats = engine.search(query)
+        print(f"\nquery: {query!r}  ({stats.seconds*1000:.2f} ms, "
+              f"{stats.postings} postings, {stats.bytes_read} bytes)")
+        for i in range(min(results.size, 3)):
+            doc = int(results.doc[i]) % len(set(DOCS))
+            print(f"  doc={int(results.doc[i])} [{int(results.start[i])},"
+                  f"{int(results.end[i])}] score={float(results.score[i]):.3f}")
+            print(f"    text: {DOCS[int(results.doc[i])][:70]}...")
+
+
+if __name__ == "__main__":
+    main()

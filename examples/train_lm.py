@@ -1,0 +1,45 @@
+"""Train a small LM for a few hundred steps under the fault-tolerance
+supervisor (checkpoint/restart + straggler detection), with an injected
+mid-run failure to demonstrate exact recovery.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import shutil
+import time
+
+from repro.launch.train import train_arch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    t0 = time.time()
+    report = train_arch(
+        args.arch,
+        "train_4k",
+        steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=25,
+        inject_failures={args.steps // 2: "simulated node loss"},
+        reduced=True,  # reduced config: same architecture family, CPU-sized
+    )
+    print(
+        f"\nsteps={report.steps_run} (restarts={report.restarts}, "
+        f"stragglers={report.straggler_events})"
+    )
+    print(f"loss: {report.losses[0]:.4f} -> {report.losses[-1]:.4f} "
+          f"({time.time()-t0:.1f}s)")
+    assert report.losses[-1] < report.losses[0], "loss should improve"
+    assert report.restarts == 1, "the injected failure should cause one restart"
+    print("OK: loss improved across an injected failure + restart")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Posting-list storage with byte-metered access.
+
+Layout mirrors the paper:
+  * ordinary index: per lemma, stream-1 = (doc,pos) postings; stream-2 =
+    NSW records (separate so QT3/QT4 can *skip* them, paper §1.2/QT5);
+  * (w,v) index: per two-component key, (doc, p_w, zz(p_v-p_w)) triples;
+  * (f,s,t) index: per three-component key, (doc, p_f, zz(off_s), zz(off_t)).
+
+All streams are delta+varbyte encoded. A `ByteMeter` counts every byte
+decoded on behalf of a query — the paper's "data read size" metric.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.codecs import (
+    delta_decode,
+    delta_encode,
+    varbyte_decode,
+    varbyte_encode,
+    zigzag_decode,
+    zigzag_encode,
+)
+
+
+@dataclass
+class ByteMeter:
+    bytes_read: int = 0
+    postings_read: int = 0
+
+    def reset(self) -> None:
+        self.bytes_read = 0
+        self.postings_read = 0
+
+    def add(self, nbytes: int, npostings: int) -> None:
+        self.bytes_read += int(nbytes)
+        self.postings_read += int(npostings)
+
+
+def encode_postings(columns: list[np.ndarray], delta_col: int = 0) -> bytes:
+    """Encode parallel posting columns. Column `delta_col` (doc ids) is
+    delta-encoded; column delta_col+1 (positions) is delta-encoded within
+    runs of equal doc id; remaining columns are stored verbatim (they are
+    already zigzagged small offsets). Interleaved row-major like a real
+    on-disk posting stream."""
+    n = columns[0].size
+    if n == 0:
+        return b""
+    docs = columns[delta_col].astype(np.int64)
+    doc_gap = delta_encode(docs)
+    enc_cols = []
+    for ci, col in enumerate(columns):
+        if ci == delta_col:
+            enc_cols.append(doc_gap)
+        elif ci == delta_col + 1:
+            pos = col.astype(np.int64)
+            pg = np.empty(n, np.int64)
+            pg[0] = pos[0]
+            same = docs[1:] == docs[:-1]
+            pg[1:] = np.where(same, pos[1:] - pos[:-1], pos[1:])
+            # position gaps can be negative only if input unsorted; zigzag to be safe
+            enc_cols.append(zigzag_encode(pg))
+        else:
+            enc_cols.append(col.astype(np.uint64))
+    inter = np.empty(n * len(columns), np.uint64)
+    for ci, col in enumerate(enc_cols):
+        inter[ci :: len(columns)] = col
+    return varbyte_encode(inter)
+
+
+def decode_postings(buf: bytes, n_columns: int) -> list[np.ndarray]:
+    vals = varbyte_decode(buf)
+    if vals.size == 0:
+        return [np.zeros(0, np.int64) for _ in range(n_columns)]
+    n = vals.size // n_columns
+    cols = [vals[ci::n_columns] for ci in range(n_columns)]
+    docs = delta_decode(cols[0])
+    out = [docs]
+    pg = zigzag_decode(cols[1])
+    # positions: cumulative within doc runs -> reconstruct via segmented cumsum
+    pos = np.empty(n, np.int64)
+    pos[0] = pg[0]
+    boundaries = np.empty(n, bool)
+    boundaries[0] = True
+    boundaries[1:] = docs[1:] != docs[:-1]
+    # segmented cumsum: cumsum then subtract carry at boundaries
+    cs = np.cumsum(pg)
+    seg_start = np.nonzero(boundaries)[0]
+    carry = np.zeros(n, np.int64)
+    carry_vals = cs[seg_start] - pg[seg_start]
+    carry[seg_start] = np.diff(np.concatenate([[0], carry_vals]))
+    pos = cs - np.cumsum(carry)
+    out.append(pos)
+    for ci in range(2, n_columns):
+        out.append(cols[ci].astype(np.int64))
+    return out
+
+
+@dataclass
+class PostingStore:
+    """Maps key -> encoded blob (+ posting count); metered decode access."""
+
+    n_columns: int
+    blobs: dict = field(default_factory=dict)
+    counts: dict = field(default_factory=dict)
+    _raw: dict = field(default_factory=dict, repr=False)  # lazily encoded
+
+    def put_raw(self, key, columns: list[np.ndarray]) -> None:
+        """Register raw columns; encoding happens lazily on first access."""
+        self._raw[key] = columns
+        self.counts[key] = int(columns[0].size)
+
+    def _blob(self, key) -> bytes:
+        b = self.blobs.get(key)
+        if b is None:
+            cols = self._raw.get(key)
+            if cols is None:
+                return b""
+            b = encode_postings(cols)
+            self.blobs[key] = b
+        return b
+
+    def __contains__(self, key) -> bool:
+        return key in self.counts
+
+    def keys(self):
+        return self.counts.keys()
+
+    def n_postings(self, key) -> int:
+        return self.counts.get(key, 0)
+
+    def read(self, key, meter: ByteMeter | None = None) -> list[np.ndarray]:
+        """Metered decode of a full posting list (the paper reads posting
+        lists sequentially from disk; Idx1 queries consume them fully)."""
+        blob = self._blob(key)
+        if meter is not None:
+            meter.add(len(blob), self.counts.get(key, 0))
+        return decode_postings(blob, self.n_columns)
+
+    def total_bytes(self) -> int:
+        # force-encode everything (used by index-size reports, not queries)
+        return sum(len(self._blob(k)) for k in self.counts)
+
+
+@dataclass
+class BlobStore:
+    """Opaque per-key byte blobs (NSW record streams)."""
+
+    blobs: dict = field(default_factory=dict)
+
+    def put(self, key, blob: bytes) -> None:
+        self.blobs[key] = blob
+
+    def read(self, key, meter: ByteMeter | None = None) -> bytes:
+        b = self.blobs.get(key, b"")
+        if meter is not None:
+            meter.add(len(b), 0)
+        return b
+
+    def total_bytes(self) -> int:
+        return sum(len(b) for b in self.blobs.values())

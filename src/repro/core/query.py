@@ -1,0 +1,133 @@
+"""Query parsing, sub-query expansion and QT1-QT5 typing (paper §1.2, §2.1).
+
+Phase 1-2 of Table 1: lemmatization yields per-word lemma alternatives;
+the sub-query list is the cartesian product over alternatives ("who are
+you who" -> Q1 [who are you who], Q2 [who be you who]); each sub-query is
+typed by the lemma classes it contains.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from enum import IntEnum
+
+from repro.core.lemmatizer import lemmatize_text
+from repro.core.lexicon import Lexicon, LemmaType, UNKNOWN_FL
+
+
+class QueryType(IntEnum):
+    QT1 = 1  # all stop lemmas
+    QT2 = 2  # all frequently used
+    QT3 = 3  # all ordinary
+    QT4 = 4  # frequently used + ordinary, no stop
+    QT5 = 5  # stop lemmas plus frequently used and/or ordinary
+
+
+@dataclass
+class SubQuery:
+    lemma_ids: list[int]
+    qtype: QueryType
+
+    def __len__(self) -> int:
+        return len(self.lemma_ids)
+
+
+def classify(lemma_ids: list[int], lexicon: Lexicon) -> QueryType:
+    types = {lexicon.type_of_id(l) for l in lemma_ids}
+    if types == {LemmaType.STOP}:
+        return QueryType.QT1
+    if types == {LemmaType.FREQUENT}:
+        return QueryType.QT2
+    if types == {LemmaType.ORDINARY}:
+        return QueryType.QT3
+    if LemmaType.STOP not in types:
+        return QueryType.QT4
+    return QueryType.QT5
+
+
+def build_subqueries(
+    text: str,
+    lexicon: Lexicon,
+    max_subqueries: int = 16,
+) -> list[SubQuery]:
+    """Phases 1-2 of the search algorithm (paper Table 1)."""
+    alts_per_word = lemmatize_text(text)
+    if not alts_per_word:
+        return []
+    id_alts: list[list[int]] = []
+    for alts in alts_per_word:
+        ids = [lexicon.fl(a) for a in alts]
+        ids = [i for i in ids if i != UNKNOWN_FL] or [UNKNOWN_FL]
+        id_alts.append(ids)
+    subs = []
+    for combo in itertools.islice(itertools.product(*id_alts), max_subqueries):
+        subs.append(SubQuery(lemma_ids=list(combo), qtype=classify(list(combo), lexicon)))
+    return subs
+
+
+def subqueries_from_ids(lemma_ids: list[int], lexicon: Lexicon) -> list[SubQuery]:
+    """For synthetic-corpus experiments where queries are lemma-id lists."""
+    return [SubQuery(lemma_ids=list(lemma_ids), qtype=classify(list(lemma_ids), lexicon))]
+
+
+def select_fst_keys(lemma_ids: list[int]) -> tuple[int, list[tuple[int, int, int]]]:
+    """QT1 index selection (paper §2.2; rule fixed in DESIGN.md §9).
+
+    Anchor f := the most frequent lemma (smallest FL-number). The remaining
+    multiset is covered by (s,t) pairs such that each key's requirement
+    matches the query's per-lemma multiplicities:
+
+    * lemmas occurring twice+ are paired with themselves first — an (l,l)
+      key demands two *distinct* occurrences of l near the anchor;
+    * distinct leftovers are paired with each other (ascending FL);
+    * a final odd leftover is paired with an already-covered lemma (which
+      adds no spurious multiplicity requirement).
+
+    Reproduces the paper's example: [who,are,you,who] -> anchor=you,
+    keys (you,are,who), (you,who,who). Lemma multiplicities >= 3 are
+    under-required by one (pair keys can demand at most 2) — same
+    approximation level as the paper's index.
+    """
+    ids = sorted(lemma_ids)
+    f = ids[0]
+    rest = ids[1:]
+    if not rest:
+        rest = [f]
+    mult: dict[int, int] = {}
+    for l in rest:
+        mult[l] = mult.get(l, 0) + 1
+    pairs: list[tuple[int, int]] = []
+    leftovers: list[int] = []
+    for l in sorted(mult):
+        m = mult[l]
+        pairs.extend([(l, l)] * (m // 2))
+        if m % 2 == 1:
+            leftovers.append(l)
+    for i in range(0, len(leftovers) - 1, 2):
+        pairs.append((leftovers[i], leftovers[i + 1]))
+    if len(leftovers) % 2 == 1:
+        last = leftovers[-1]
+        covered = [l for p in pairs for l in p if l != last]
+        partner = covered[0] if covered else last
+        a, b = (partner, last) if partner <= last else (last, partner)
+        pairs.append((a, b))
+    keys = []
+    for s, t in pairs:
+        key = (f, s, t)
+        if key not in keys:
+            keys.append(key)
+    return f, keys
+
+
+def select_wv_keys(lemma_ids: list[int]) -> list[tuple[int, int]]:
+    """QT2 pair covering: sort ascending by FL, pair consecutive lemmas;
+    odd count pairs the leftover with the most frequent lemma."""
+    ids = sorted(lemma_ids)
+    keys = []
+    for i in range(0, len(ids) - 1, 2):
+        keys.append((ids[i], ids[i + 1]))
+    if len(ids) % 2 == 1:
+        a, b = ids[0], ids[-1]
+        keys.append((a, b) if a <= b else (b, a))
+    return keys

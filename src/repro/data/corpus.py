@@ -1,0 +1,157 @@
+"""Synthetic Zipf corpus + token tables.
+
+The paper's collection (71.5 GB, 195k documents of fiction/articles) is not
+available offline, so experiments run on a synthetic corpus whose word
+frequency distribution follows Zipf's law (paper §1, Fig. 1). Lemma ids are
+frequency ranks *by construction*, which matches the Lexicon convention
+(id == FL-number) and lets us plant the exact SWCount/FUCount regime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.lexicon import Lexicon, DEFAULT_FU_COUNT, DEFAULT_SW_COUNT
+
+
+@dataclass
+class TokenTable:
+    """Flat occurrence table: one row per (token position, lemma).
+
+    Multi-lemma words contribute several rows with the same (doc, pos).
+    Rows are sorted by (doc, pos, lemma).
+    """
+
+    doc_ids: np.ndarray  # int32 (T,)
+    positions: np.ndarray  # int32 (T,) ordinal within document
+    lemma_ids: np.ndarray  # int32 (T,)
+    doc_lengths: np.ndarray  # int32 (n_docs,) in token positions
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.doc_lengths.size)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.doc_ids.size)
+
+    def sorted_copy(self) -> "TokenTable":
+        order = np.lexsort((self.lemma_ids, self.positions, self.doc_ids))
+        return TokenTable(
+            self.doc_ids[order], self.positions[order], self.lemma_ids[order], self.doc_lengths
+        )
+
+    @classmethod
+    def from_docs(cls, docs: list[np.ndarray]) -> "TokenTable":
+        """docs: list of int lemma-id arrays (single lemma per position)."""
+        lengths = np.array([len(d) for d in docs], np.int32)
+        doc_ids = np.repeat(np.arange(len(docs), dtype=np.int32), lengths)
+        positions = np.concatenate([np.arange(len(d), dtype=np.int32) for d in docs]) if docs else np.zeros(0, np.int32)
+        lemma_ids = np.concatenate(docs).astype(np.int32) if docs else np.zeros(0, np.int32)
+        return cls(doc_ids, positions, lemma_ids, lengths)
+
+    @classmethod
+    def from_lemmatized(cls, docs: list[list[list[int]]]) -> "TokenTable":
+        """docs: per doc, per token position, a list of lemma ids."""
+        d_l, p_l, l_l, lens = [], [], [], []
+        for di, doc in enumerate(docs):
+            lens.append(len(doc))
+            for pi, alts in enumerate(doc):
+                for lem in alts:
+                    d_l.append(di)
+                    p_l.append(pi)
+                    l_l.append(lem)
+        return cls(
+            np.array(d_l, np.int32),
+            np.array(p_l, np.int32),
+            np.array(l_l, np.int32),
+            np.array(lens, np.int32),
+        )
+
+
+def zipf_probs(vocab_size: int, alpha: float = 1.1, shift: float = 2.7) -> np.ndarray:
+    """Zipf-Mandelbrot pmf over ranks 0..vocab_size-1."""
+    ranks = np.arange(vocab_size, dtype=np.float64)
+    w = 1.0 / np.power(ranks + shift, alpha)
+    return w / w.sum()
+
+
+def generate_corpus(
+    n_docs: int = 2000,
+    mean_doc_len: int = 200,
+    vocab_size: int = 50_000,
+    alpha: float = 1.1,
+    seed: int = 0,
+) -> tuple[TokenTable, Lexicon]:
+    """Generate a Zipf corpus; returns (token table, lexicon).
+
+    Lemma ids are re-ranked by *observed* frequency so the Lexicon id ==
+    FL-number invariant holds exactly even at small corpus sizes.
+    """
+    rng = np.random.default_rng(seed)
+    lengths = np.maximum(8, rng.poisson(mean_doc_len, n_docs)).astype(np.int64)
+    total = int(lengths.sum())
+    probs = zipf_probs(vocab_size, alpha)
+    raw = rng.choice(vocab_size, size=total, p=probs).astype(np.int32)
+
+    # re-rank by observed frequency (stable: ties broken by original id)
+    counts = np.bincount(raw, minlength=vocab_size)
+    order = np.lexsort((np.arange(vocab_size), -counts))  # observed rank -> raw id
+    rank_of = np.empty(vocab_size, np.int32)
+    rank_of[order] = np.arange(vocab_size, dtype=np.int32)
+    tokens = rank_of[raw]
+
+    doc_ids = np.repeat(np.arange(n_docs, dtype=np.int32), lengths)
+    positions = np.concatenate([np.arange(n, dtype=np.int32) for n in lengths])
+    table = TokenTable(doc_ids, positions, tokens, lengths.astype(np.int32))
+
+    sorted_counts = counts[order]
+    n_seen = int((sorted_counts > 0).sum())
+    # doc freqs
+    pair = doc_ids.astype(np.int64) * vocab_size + tokens
+    uniq = np.unique(pair)
+    dfs = np.bincount((uniq % vocab_size).astype(np.int64), minlength=vocab_size)
+    lex = Lexicon.from_rank_counts(
+        counts=sorted_counts[:n_seen],
+        doc_freqs=dfs[:n_seen],
+        n_docs=n_docs,
+        sw_count=min(DEFAULT_SW_COUNT, n_seen // 3),
+        fu_count=min(DEFAULT_FU_COUNT, n_seen // 3),
+    )
+    return table, lex
+
+
+def sample_stop_queries(
+    table: TokenTable,
+    lex: Lexicon,
+    n_queries: int,
+    min_len: int = 3,
+    max_len: int = 5,
+    window: int = 9,
+    seed: int = 0,
+) -> list[list[int]]:
+    """Sample QT1 queries (all stop lemmas) from real co-occurrence windows,
+    mirroring the paper's query-log-derived set: queries of 3..5 frequently
+    occurring words that do have proximate matches in the collection."""
+    rng = np.random.default_rng(seed)
+    stop_rows = np.nonzero(table.lemma_ids < lex.sw_count)[0]
+    # order rows to allow windowed scans
+    queries: list[list[int]] = []
+    guard = 0
+    while len(queries) < n_queries and guard < n_queries * 50:
+        guard += 1
+        r = int(rng.choice(stop_rows))
+        d, p = int(table.doc_ids[r]), int(table.positions[r])
+        m = (table.doc_ids == d) & (np.abs(table.positions - p) <= window)
+        lems = table.lemma_ids[m]
+        lems = lems[lems < lex.sw_count]
+        if lems.size < min_len:
+            continue
+        L = int(rng.integers(min_len, max_len + 1))
+        take = rng.choice(lems.size, size=min(L, lems.size), replace=False)
+        q = [int(x) for x in lems[take]]
+        if len(q) >= min_len:
+            queries.append(q)
+    return queries

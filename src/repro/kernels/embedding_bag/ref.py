@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for EmbeddingBag (recsys hot path).
+
+JAX has no native EmbeddingBag; the reference composes jnp.take with a
+masked sum (equivalently segment_sum over the bag axis). ids == -1 are
+padding and contribute nothing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    ids: jnp.ndarray,  # (B, S) int32, -1 = padding
+    table: jnp.ndarray,  # (V, D)
+    weights: jnp.ndarray | None = None,  # (B, S) or None
+    combine: str = "sum",
+) -> jnp.ndarray:
+    mask = (ids >= 0).astype(table.dtype)  # (B, S)
+    safe = jnp.maximum(ids, 0)
+    rows = jnp.take(table, safe, axis=0)  # (B, S, D)
+    w = mask if weights is None else mask * weights.astype(table.dtype)
+    out = jnp.einsum("bs,bsd->bd", w, rows)
+    if combine == "mean":
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+        out = out / denom
+    return out

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for sorted posting-list intersection.
+
+Semantics: for each element of sorted array `a`, is it present in sorted
+array `b`? (Padding slots hold SENTINEL and never match.) This is the
+vectorized Equalize (paper §2.3): aligning posting iterators on document
+ids == computing membership of one sorted doc-id list in another.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import SENTINEL
+
+
+def intersect_mask_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: (n,) sorted int32; b: (m,) sorted int32 -> bool (n,) membership."""
+    idx = jnp.searchsorted(b, a)
+    idx_c = jnp.clip(idx, 0, b.shape[0] - 1)
+    found = (idx < b.shape[0]) & (b[idx_c] == a) & (a != SENTINEL)
+    return found
+
+
+def intersect_idx_ref(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Also return, per element of a, the index in b of the match (-1 if none)."""
+    idx = jnp.searchsorted(b, a)
+    idx_c = jnp.clip(idx, 0, b.shape[0] - 1)
+    found = (idx < b.shape[0]) & (b[idx_c] == a) & (a != SENTINEL)
+    return found, jnp.where(found, idx_c, -1)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the proximity window join.
+
+Given two sorted position arrays (packed global positions: doc * stride +
+pos, padding = SENTINEL), for each a_i: does b contain a position within
+MaxDistance? Returns (mask, nearest_lo, nearest_hi) where nearest_lo/hi
+are the min/max matched b-positions used for fragment bounds [P, E].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import SENTINEL
+
+
+def proximity_join_ref(a: jnp.ndarray, b: jnp.ndarray, d: int):
+    m = b.shape[0]
+    lo_idx = jnp.searchsorted(b, a - d, side="left")
+    hi_idx = jnp.searchsorted(b, a + d, side="right")
+    cnt = hi_idx - lo_idx
+    mask = (cnt > 0) & (a != SENTINEL)
+    lo_c = jnp.clip(lo_idx, 0, m - 1)
+    hi_c = jnp.clip(hi_idx - 1, 0, m - 1)
+    b_lo = jnp.where(mask, b[lo_c], a)
+    b_hi = jnp.where(mask, b[hi_c], a)
+    return mask, b_lo, b_hi
+
+
+def proximity_count_ref(a: jnp.ndarray, b: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Number of b-positions within distance d of each a (multiplicity
+    support for repeated query lemmas)."""
+    lo_idx = jnp.searchsorted(b, a - d, side="left")
+    hi_idx = jnp.searchsorted(b, a + d, side="right")
+    return jnp.where(a != SENTINEL, hi_idx - lo_idx, 0)

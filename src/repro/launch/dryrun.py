@@ -1,0 +1,158 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and record memory / cost / collective
+analyses for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --arch qwen1.5-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --layer-probe ...   (per-layer costs for scan scaling)
+
+Results are appended to --out (JSON), one record per cell.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_lm_layer_probe, build_step
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, layer_probe: bool = False) -> dict:
+    arch = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": arch.shapes[shape_name].kind,
+    }
+    t0 = time.time()
+    built = build_step(arch, shape_name, mesh)
+    lowered = built.lower()
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_per_device_gib": round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    txt = compiled.as_text()
+    cs = collective_stats(txt)
+    rec["collectives"] = {
+        "once_bytes": {k: int(v) for k, v in cs.op_bytes.items()},
+        "in_loop_bytes": {k: int(v) for k, v in cs.in_loop_bytes.items()},
+        "n_ops": cs.count,
+    }
+    rec["meta"] = built.meta
+    # per-layer probe: undoes scan's count-the-body-once in cost_analysis
+    if arch.family == "lm":
+        probe = build_lm_layer_probe(arch, arch.shapes[shape_name], mesh)
+        pcomp = probe.lower().compile()
+        pca = pcomp.cost_analysis() or {}
+        rec["layer_probe"] = {
+            "flops": float(pca.get("flops", 0.0)),
+            "bytes_accessed": float(pca.get("bytes accessed", 0.0)),
+        }
+    print(
+        f"[dryrun] {arch_id}/{shape_name} mesh={rec['mesh']} "
+        f"compile={rec['compile_s']}s peak/dev={rec['memory']['peak_per_device_gib']} GiB "
+        f"flops={rec['cost']['flops']:.3e} colls={cs.count}"
+    )
+    return rec
+
+
+def iter_cells(arch_sel: str, shape_sel: str):
+    if arch_sel == "all":
+        arch_ids = [a for a in ARCHS]
+    elif arch_sel == "assigned":
+        from repro.configs.registry import ASSIGNED_ARCH_IDS
+
+        arch_ids = list(ASSIGNED_ARCH_IDS)
+    else:
+        arch_ids = [arch_sel]
+    for aid in arch_ids:
+        arch = get_arch(aid)
+        shapes = [shape_sel] if shape_sel != "all" else list(arch.shapes)
+        for s in shapes:
+            if s in arch.shapes:
+                yield aid, s
+        if shape_sel == "all":
+            for s, why in arch.skips.items():
+                print(f"[dryrun] SKIP {aid}/{s}: {why}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--keep-going", action="store_true", default=True)
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    # skip cells already recorded (restartable across invocations)
+    done = set()
+    if out.exists():
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+    failures = 0
+    with out.open("a") as fh:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            for aid, s in iter_cells(args.arch, args.shape):
+                if (aid, s, mesh_name) in done:
+                    print(f"[dryrun] cached {aid}/{s} {mesh_name}")
+                    continue
+                try:
+                    rec = run_cell(aid, s, multi)
+                except Exception as e:  # record and continue
+                    failures += 1
+                    rec = {
+                        "arch": aid, "shape": s, "mesh": mesh_name,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[dryrun] FAIL {aid}/{s} {mesh_name}: {rec['error']}")
+                fh.write(json.dumps(rec) + "\n")
+                fh.flush()
+    print(f"[dryrun] done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

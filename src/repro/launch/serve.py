@@ -1,0 +1,48 @@
+"""Serving launcher: builds a proximity index and serves batched QT1
+requests through the bucketed engine (thin CLI over serving/engine.py;
+examples/serve_search.py is the narrated walkthrough).
+
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 3000 --requests 512
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.index_builder import build_index
+from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import SearchServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=3000)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--max-distance", type=int, default=5)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--top-k", type=int, default=8)
+    args = ap.parse_args()
+
+    table, lex = generate_corpus(args.n_docs, mean_doc_len=160, vocab_size=40_000, seed=1)
+    index = build_index(table, lex, max_distance=args.max_distance)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    engine = SearchServingEngine(index, mesh, max_batch=args.max_batch, top_k=args.top_k)
+    for q in sample_stop_queries(table, lex, args.requests, window=3, seed=2):
+        engine.submit(q)
+    t0 = time.time()
+    responses = engine.drain()
+    wall = time.time() - t0
+    lat = np.array([r.latency_s for r in responses])
+    print(
+        f"served {len(responses)} requests in {wall:.2f}s ({len(responses)/wall:.1f} qps); "
+        f"batch p50={np.percentile(lat, 50)*1e3:.1f}ms p99={np.percentile(lat, 99)*1e3:.1f}ms; "
+        f"buckets={engine.stats['bucket_hist']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

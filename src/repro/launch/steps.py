@@ -1,0 +1,725 @@
+"""Step builders: (arch x shape x mesh) -> jitted step + abstract inputs.
+
+This is the single entry point used by the multi-pod dry-run, the roofline
+analysis, the smoke tests and the example drivers. For every cell it
+returns a `BuiltStep` carrying the jitted function (with in/out shardings
+attached), the ordered abstract arguments (ShapeDtypeStruct pytrees — no
+allocation), and metadata for the roofline (model flops, layer count).
+
+Sharding strategy (DESIGN.md §5):
+* LM train: FSDP(data) x TP(model) params + DP(pod) replication;
+  batch over (pod, data);
+* LM serving: TP-only params (replicated over data); KV cache batch over
+  (pod,data), kv-heads over model when divisible else cache-seq over model;
+* MoE: experts over model (expert parallelism inside shard_map);
+* GNN: edge-parallel over the full mesh, nodes replicated;
+* recsys: tables row-sharded over model, batch over (pod,data);
+  retrieval shards the candidate axis over the dp axes (candidate ids must
+  not be sharded over `model` — the table-shard psum would mix rows);
+* search: doc-sharded postings over model, queries over (pod,data).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.launch.mesh import dp_axes_of, dp_size, tp_size
+from repro.models import gnn, recsys, transformer
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclass
+class BuiltStep:
+    fn: Any  # jitted
+    args: tuple  # abstract (ShapeDtypeStruct) pytrees, positional
+    meta: dict = field(default_factory=dict)
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def _is_pspec(x):
+    return isinstance(x, P)
+
+
+def _shardings(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=_is_pspec)
+
+
+def fsdpify(pspecs, abstract_params, mesh, axis="data"):
+    """Add FSDP sharding over `axis` to the first shardable free dimension
+    of each parameter (skipping the scan/layer-stack dim)."""
+    fs = mesh.shape.get(axis, 1)
+    if fs == 1:
+        return pspecs
+
+    def per_leaf(path, spec, arr):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        skip0 = "layers" in names or "blocks" in names
+        parts = list(spec) + [None] * (arr.ndim - len(spec))
+        for i in range(1 if skip0 else 0, arr.ndim):
+            if parts[i] is None and arr.shape[i] % fs == 0 and arr.shape[i] >= fs:
+                parts[i] = axis
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(
+        per_leaf, pspecs, abstract_params, is_leaf=_is_pspec
+    )
+
+
+# ==========================================================================
+# LM family
+# ==========================================================================
+def pad_heads_cfg(cfg, tp: int):
+    """§Perf hillclimb: round the head count up to a TP multiple (Qwen-32B:
+    40 -> 48 on TP=16) so q/k/v/wo shard by head instead of triggering
+    GSPMD's involuntary full rematerialization. Numerically equivalent
+    when the pad-head projections are zero (wo rows zero the pad heads'
+    contribution)."""
+    if cfg.n_heads % tp == 0:
+        return cfg
+    pad_to = -(-cfg.n_heads // tp) * tp
+    kv = cfg.n_kv if cfg.n_kv % tp == 0 or cfg.n_kv != cfg.n_heads else pad_to
+    return replace(cfg, n_heads=pad_to, n_kv=kv, d_head=cfg.head_dim)
+
+
+def build_lm_step(arch: ArchSpec, shape: ShapeSpec, mesh) -> BuiltStep:
+    import os
+
+    cfg = arch.model_cfg
+    dp_ax = dp_axes_of(mesh)
+    tp = tp_size(mesh)
+    if os.environ.get("REPRO_PAD_HEADS", "0") == "1":
+        cfg = pad_heads_cfg(cfg, tp)
+    dims = shape.dims
+    B, S = dims["global_batch"], dims["seq_len"]
+    params_abs = jax.eval_shape(
+        functools.partial(transformer.init_params, cfg), jax.random.key(0)
+    )
+    meta = {
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "n_layers": cfg.n_layers,
+        "tokens": B * S if shape.kind != "decode" else B,
+    }
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        pspecs = transformer.param_pspecs(cfg, tp)
+        pspecs = fsdpify(pspecs, params_abs, mesh)
+        opt_pspecs = {"mu": pspecs, "nu": pspecs, "step": P()}
+        batch_spec = {"tokens": P(dp_ax, None), "targets": P(dp_ax, None)}
+        # reduced (smoke/example) configs train faster with a higher LR
+        opt_cfg = AdamWConfig(lr=1e-3) if cfg.d_model <= 128 else AdamWConfig()
+        # microbatching: bound the remat residual stack (L x Bmicro x S x D
+        # bf16) per device. The budget is tunable because it trades
+        # activation memory against FSDP re-gather traffic (params are
+        # re-gathered once per microbatch per layer — §Perf hillclimb B):
+        # a 2x larger stack budget halves the collective term.
+        stack_gib = float(os.environ.get("REPRO_MICRO_STACK_GIB", "2"))
+        dp = dp_size(mesh)
+        b_local = max(B // dp, 1)
+        stack_bytes = lambda bm: cfg.n_layers * bm * S * cfg.d_model * 2
+        micro_local = b_local
+        while micro_local > 1 and stack_bytes(micro_local) > stack_gib * 2**30:
+            micro_local //= 2
+        n_micro = b_local // micro_local
+        meta["n_micro"] = n_micro
+
+        import os
+
+        bf16_gather = os.environ.get("REPRO_BF16_GATHER", "1") != "0"
+        meta["bf16_gather"] = bf16_gather
+
+        def step(params, opt_state, batch):
+            loss, grads = transformer.lm_grads_microbatched(
+                cfg, params, batch["tokens"], batch["targets"], n_micro, mesh, dp_ax,
+                param_pspecs=pspecs, bf16_gather=bf16_gather,
+            )
+            new_p, new_s, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), I32),
+            "targets": jax.ShapeDtypeStruct((B, S), I32),
+        }
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                _shardings(mesh, pspecs),
+                _shardings(mesh, opt_pspecs),
+                _shardings(mesh, batch_spec),
+            ),
+            out_shardings=(
+                _shardings(mesh, pspecs),
+                _shardings(mesh, opt_pspecs),
+                _shardings(mesh, {"loss": P(), "grad_norm": P()}),
+            ),
+            donate_argnums=(0, 1),
+        )
+        return BuiltStep(fn, (params_abs, opt_abs, batch_abs), meta)
+
+    # serving: bf16 params (production serving never keeps f32 masters)
+    params_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params_abs,
+    )
+    serve_pspecs = transformer.param_pspecs(cfg, tp)
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            return transformer.prefill(cfg, params, tokens, mesh, dp_ax)
+
+        cache_spec = transformer.cache_pspecs(cfg, tp, dp_ax, seq_len=S)
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                _shardings(mesh, serve_pspecs),
+                NamedSharding(mesh, P(dp_ax, None)),
+            ),
+            out_shardings=(
+                NamedSharding(mesh, P(dp_ax, None)),
+                _shardings(mesh, cache_spec),
+            ),
+        )
+        tokens_abs = jax.ShapeDtypeStruct((B, S), I32)
+        return BuiltStep(fn, (params_abs, tokens_abs), meta)
+
+    # decode: one new token against an S-long KV cache.
+    # REPRO_KV_INT8=1 switches to the quantized cache (§Perf hillclimb).
+    import os
+
+    kv_int8 = os.environ.get("REPRO_KV_INT8", "0") == "1"
+    meta["kv_cache"] = "int8" if kv_int8 else "bf16"
+    kshape = (cfg.n_layers, B, S, cfg.n_kv, cfg.head_dim)
+    if kv_int8:
+        cache_abs = {
+            "k": jax.ShapeDtypeStruct(kshape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(kshape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(kshape[:-1], jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct(kshape[:-1], jnp.float32),
+        }
+    else:
+        cache_abs = {
+            "k": jax.ShapeDtypeStruct(kshape, jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(kshape, jnp.bfloat16),
+        }
+    cache_spec = transformer.cache_pspecs(cfg, tp, dp_ax, seq_len=S, quantized=kv_int8)
+
+    def step(params, token, caches, position):
+        return transformer.decode_step(cfg, params, token, caches, position, mesh, dp_ax)
+
+    fn = jax.jit(
+        step,
+        in_shardings=(
+            _shardings(mesh, serve_pspecs),
+            NamedSharding(mesh, P(dp_ax, None)),
+            _shardings(mesh, cache_spec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P(dp_ax, None)),
+            _shardings(mesh, cache_spec),
+        ),
+        donate_argnums=(2,),
+    )
+    token_abs = jax.ShapeDtypeStruct((B, 1), I32)
+    pos_abs = jax.ShapeDtypeStruct((), I32)
+    return BuiltStep(fn, (params_abs, token_abs, cache_abs, pos_abs), meta)
+
+
+def build_lm_layer_probe(arch: ArchSpec, shape: ShapeSpec, mesh) -> BuiltStep:
+    """Single-transformer-layer microstep with the cell's sharding: its
+    cost_analysis supplies the per-layer flops/bytes that the roofline
+    multiplies by (L-1) to undo scan's count-the-body-once behaviour.
+    Collectives are NOT taken from the probe (the full graph's while-body
+    parse already scales them)."""
+    cfg = arch.model_cfg
+    dp_ax = dp_axes_of(mesh)
+    tp = tp_size(mesh)
+    dims = shape.dims
+    B, S = dims["global_batch"], dims["seq_len"]
+    block = transformer._block(cfg, mesh, dp_ax)
+    layer_abs = jax.eval_shape(
+        functools.partial(transformer._layer_init, cfg), jax.random.key(0)
+    )
+    layer_specs = transformer.param_pspecs(cfg, tp, stacked=False)["layers"]
+    dt = jnp.dtype(cfg.dtype)
+    x_spec = P(dp_ax, None, None)
+
+    if shape.kind == "train":
+        def probe(x, p_l):
+            def f(args):
+                y, _, aux = block(args[0], args[1])
+                return jnp.sum(y.astype(jnp.float32)) + aux
+
+            loss, grads = jax.value_and_grad(f)((x, p_l))
+            return loss, grads
+
+        x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        fn = jax.jit(
+            probe,
+            in_shardings=(NamedSharding(mesh, x_spec), _shardings(mesh, layer_specs)),
+        )
+        return BuiltStep(fn, (x_abs, layer_abs), {"n_layers": 1})
+
+    if shape.kind == "prefill":
+        def probe(x, p_l):
+            y, cache, _ = block(x, p_l)
+            return y, cache
+
+        x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        fn = jax.jit(
+            probe,
+            in_shardings=(NamedSharding(mesh, x_spec), _shardings(mesh, layer_specs)),
+        )
+        return BuiltStep(fn, (x_abs, layer_abs), {"n_layers": 1})
+
+    # decode
+    cache_abs = {
+        "k": jax.ShapeDtypeStruct((B, S, cfg.n_kv, cfg.head_dim), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((B, S, cfg.n_kv, cfg.head_dim), jnp.bfloat16),
+    }
+    full_spec = transformer.cache_pspecs(cfg, tp, dp_ax, seq_len=S)
+    cache_spec = {k: P(*tuple(v)[1:]) for k, v in full_spec.items()}  # drop L dim
+
+    def probe(x, p_l, cache_l, position):
+        y, new_cache, _ = block(x, p_l, cache_l=cache_l, position=position)
+        return y, new_cache
+
+    x_abs = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+    fn = jax.jit(
+        probe,
+        in_shardings=(
+            NamedSharding(mesh, x_spec),
+            _shardings(mesh, layer_specs),
+            _shardings(mesh, cache_spec),
+            NamedSharding(mesh, P()),
+        ),
+    )
+    return BuiltStep(fn, (x_abs, layer_abs, cache_abs, jax.ShapeDtypeStruct((), I32)), {"n_layers": 1})
+
+
+# ==========================================================================
+# GNN family (EGNN)
+# ==========================================================================
+def build_gnn_step(arch: ArchSpec, shape: ShapeSpec, mesh) -> BuiltStep:
+    dims = shape.dims
+    cfg = replace(arch.model_cfg, d_feat=dims["d_feat"])
+    params_abs = jax.eval_shape(functools.partial(gnn.init_params, cfg), jax.random.key(0))
+    opt_abs = jax.eval_shape(init_opt_state, params_abs)
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    dp_ax = dp_axes_of(mesh)
+    all_axes = tuple(mesh.axis_names)
+    meta = {
+        "n_layers": cfg.n_layers,
+        "model_params": sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_abs)),
+        "n_edges": dims["n_edges"] * dims.get("batch", 1),
+    }
+
+    p_spec = jax.tree.map(lambda _: P(), params_abs)
+    opt_spec = {"mu": p_spec, "nu": p_spec, "step": P()}
+
+    if dims.get("batched"):
+        Bt, N, E = dims["batch"], dims["n_nodes"], dims["n_edges"]
+        batch_abs = {
+            "feats": jax.ShapeDtypeStruct((Bt, N, dims["d_feat"]), F32),
+            "coords": jax.ShapeDtypeStruct((Bt, N, 3), F32),
+            "src": jax.ShapeDtypeStruct((Bt, E), I32),
+            "dst": jax.ShapeDtypeStruct((Bt, E), I32),
+            "edge_mask": jax.ShapeDtypeStruct((Bt, E), F32),
+            "node_mask": jax.ShapeDtypeStruct((Bt, N), F32),
+            "targets": jax.ShapeDtypeStruct((Bt, N), F32),
+        }
+        batch_spec = {k: P(dp_ax, *([None] * (len(v.shape) - 1))) for k, v in batch_abs.items()}
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: gnn.batched_loss(cfg, p, batch))(params)
+            new_p, new_s, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+    else:
+        N, E = dims["n_nodes"], dims["n_edges"]
+        # pad the edge axis to a multiple of 512 so it shards over either
+        # production mesh (256 or 512 devices); pad edges carry mask=0
+        E = -(-E // 512) * 512
+        batch_abs = {
+            "feats": jax.ShapeDtypeStruct((N, dims["d_feat"]), F32),
+            "coords": jax.ShapeDtypeStruct((N, 3), F32),
+            "src": jax.ShapeDtypeStruct((E,), I32),
+            "dst": jax.ShapeDtypeStruct((E,), I32),
+            "edge_mask": jax.ShapeDtypeStruct((E,), F32),
+            "node_mask": jax.ShapeDtypeStruct((N,), F32),
+            "targets": jax.ShapeDtypeStruct((N,), F32),
+        }
+        e_spec = P(all_axes)
+        batch_spec = {
+            "feats": P(), "coords": P(), "src": e_spec, "dst": e_spec,
+            "edge_mask": e_spec, "node_mask": P(), "targets": P(),
+        }
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn.loss_fn(cfg, p, batch, mesh=mesh, edge_axes=all_axes)
+            )(params)
+            new_p, new_s, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+    fn = jax.jit(
+        step,
+        in_shardings=(
+            _shardings(mesh, p_spec),
+            _shardings(mesh, opt_spec),
+            _shardings(mesh, batch_spec),
+        ),
+        out_shardings=(
+            _shardings(mesh, p_spec),
+            _shardings(mesh, opt_spec),
+            _shardings(mesh, {"loss": P(), "grad_norm": P()}),
+        ),
+        donate_argnums=(0, 1),
+    )
+    return BuiltStep(fn, (params_abs, opt_abs, batch_abs), meta)
+
+
+# ==========================================================================
+# RecSys family
+# ==========================================================================
+def _recsys_param_pspecs(params_abs, mesh):
+    """Embedding tables row-sharded over model when divisible; towers
+    replicated (tiny)."""
+    tp = tp_size(mesh)
+
+    def per_leaf(path, arr):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if (
+            any("emb" in n for n in names)
+            and arr.ndim == 2
+            and arr.shape[0] % tp == 0
+            and arr.shape[0] >= 64 * tp
+        ):
+            return P("model", None)
+        return P(*([None] * arr.ndim))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_abs)
+
+
+def build_recsys_step(arch: ArchSpec, shape: ShapeSpec, mesh) -> BuiltStep:
+    cfg = arch.model_cfg
+    dp_ax = dp_axes_of(mesh)
+    dims = shape.dims
+    B = dims["batch"]
+    kind = shape.kind
+    arch_kind = (
+        "seqrec" if isinstance(cfg, recsys.SeqRecConfig)
+        else "din" if isinstance(cfg, recsys.DINConfig)
+        else "twotower"
+    )
+    tp = tp_size(mesh)
+
+    init = {
+        "seqrec": functools.partial(recsys.seqrec_init, cfg),
+        "din": functools.partial(recsys.din_init, cfg),
+        "twotower": functools.partial(recsys.twotower_init, cfg),
+    }[arch_kind]
+    params_abs = jax.eval_shape(init, jax.random.key(0))
+    p_spec = _recsys_param_pspecs(params_abs, mesh)
+    # tables actually sharded? (smoke configs are too small to shard)
+    table_sharded = any(
+        s != P(*([None] * 2)) for s in jax.tree.leaves(p_spec, is_leaf=_is_pspec) if len(s) == 2
+    ) and tp > 1
+    use_mesh = mesh if table_sharded else None
+    meta = {
+        "n_layers": getattr(cfg, "n_blocks", 1),
+        "model_params": sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_abs)),
+    }
+
+    from repro.configs.recsys_archs import N_NEG
+
+    if arch_kind == "seqrec":
+        S = cfg.seq_len
+        if kind == "train":
+            batch_abs = {
+                "hist": jax.ShapeDtypeStruct((B, S), I32),
+                "target": jax.ShapeDtypeStruct((B,), I32),
+                "negatives": jax.ShapeDtypeStruct((B, N_NEG), I32),
+            }
+        elif kind == "serve":
+            batch_abs = {
+                "hist": jax.ShapeDtypeStruct((B, S), I32),
+                "candidates": jax.ShapeDtypeStruct((B, 100), I32),
+            }
+        else:
+            C = dims["n_candidates"]
+            batch_abs = {
+                "hist": jax.ShapeDtypeStruct((1, S), I32),
+                "candidates": jax.ShapeDtypeStruct((1, C), I32),
+            }
+    elif arch_kind == "din":
+        S = cfg.seq_len
+        if kind == "retrieval":
+            C = dims["n_candidates"]
+            batch_abs = {
+                "hist_items": jax.ShapeDtypeStruct((1, S), I32),
+                "hist_cates": jax.ShapeDtypeStruct((1, S), I32),
+                "cand_items": jax.ShapeDtypeStruct((C,), I32),
+                "cand_cates": jax.ShapeDtypeStruct((C,), I32),
+                "user_feats": jax.ShapeDtypeStruct((1, cfg.d_user), F32),
+            }
+        else:
+            batch_abs = {
+                "hist_items": jax.ShapeDtypeStruct((B, S), I32),
+                "hist_cates": jax.ShapeDtypeStruct((B, S), I32),
+                "target_item": jax.ShapeDtypeStruct((B,), I32),
+                "target_cate": jax.ShapeDtypeStruct((B,), I32),
+                "user_feats": jax.ShapeDtypeStruct((B, cfg.d_user), F32),
+            }
+            if kind == "train":
+                batch_abs["labels"] = jax.ShapeDtypeStruct((B,), F32)
+    else:
+        if kind == "retrieval":
+            C = dims["n_candidates"]
+            batch_abs = {
+                "hist": jax.ShapeDtypeStruct((1, cfg.hist_len), I32),
+                "user_feats": jax.ShapeDtypeStruct((1, cfg.d_user), F32),
+                "cand_items": jax.ShapeDtypeStruct((C,), I32),
+                "cand_cates": jax.ShapeDtypeStruct((C,), I32),
+            }
+        else:
+            batch_abs = {
+                "hist": jax.ShapeDtypeStruct((B, cfg.hist_len), I32),
+                "user_feats": jax.ShapeDtypeStruct((B, cfg.d_user), F32),
+                "item": jax.ShapeDtypeStruct((B,), I32),
+                "cate": jax.ShapeDtypeStruct((B,), I32),
+            }
+            if kind == "train":
+                batch_abs["log_q"] = jax.ShapeDtypeStruct((B,), F32)
+
+    # batch sharding: candidate axes over dp only (see module docstring);
+    # B=1 axes replicated; everything else over dp.
+    cand_spec_1d = P(dp_ax) if (dims.get("n_candidates", 0) % max(dp_size(mesh), 1) == 0 and dp_size(mesh) > 1) else P()
+
+    def batch_pspec(name, arr):
+        if name == "candidates" and arr.shape[0] == 1:
+            return P(None, dp_ax if (dp_size(mesh) > 1 and arr.shape[1] % dp_size(mesh) == 0) else None)
+        if name.startswith("cand"):
+            return cand_spec_1d
+        if arr.shape[0] == 1 or dp_size(mesh) == 1 or arr.shape[0] % dp_size(mesh) != 0:
+            return P(*([None] * arr.ndim))
+        return P(dp_ax, *([None] * (arr.ndim - 1)))
+
+    batch_spec = {k: batch_pspec(k, v) for k, v in batch_abs.items()}
+
+    if kind == "train":
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        opt_spec = {"mu": p_spec, "nu": p_spec, "step": P()}
+        opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+        loss_fn0 = {
+            "seqrec": lambda p, b: recsys.seqrec_loss(cfg, p, b, use_mesh, dp_ax),
+            "din": lambda p, b: recsys.din_loss(cfg, p, b, use_mesh, dp_ax),
+            "twotower": lambda p, b: recsys.twotower_loss(cfg, p, b, use_mesh, dp_ax),
+        }[arch_kind]
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: loss_fn0(p, batch))(params)
+            new_p, new_s, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                _shardings(mesh, p_spec),
+                _shardings(mesh, opt_spec),
+                _shardings(mesh, batch_spec),
+            ),
+            out_shardings=(
+                _shardings(mesh, p_spec),
+                _shardings(mesh, opt_spec),
+                _shardings(mesh, {"loss": P(), "grad_norm": P()}),
+            ),
+            donate_argnums=(0, 1),
+        )
+        return BuiltStep(fn, (params_abs, opt_abs, batch_abs), meta)
+
+    if kind == "serve":
+        serve_fn0 = {
+            "seqrec": lambda p, b: recsys.seqrec_score(cfg, p, b, use_mesh, dp_ax),
+            "din": lambda p, b: recsys.din_forward(cfg, p, b, use_mesh, dp_ax),
+            "twotower": lambda p, b: recsys.twotower_score(cfg, p, b, use_mesh, dp_ax),
+        }[arch_kind]
+        fn = jax.jit(
+            serve_fn0,
+            in_shardings=(_shardings(mesh, p_spec), _shardings(mesh, batch_spec)),
+        )
+        return BuiltStep(fn, (params_abs, batch_abs), meta)
+
+    # retrieval (B=1): user side replicated; candidate axis over dp
+    if arch_kind == "seqrec":
+        retr = lambda p, b: recsys.seqrec_score(cfg, p, b, use_mesh, ())
+    elif arch_kind == "din":
+        retr = lambda p, b: recsys.din_retrieval(
+            cfg, p, b, 100, use_mesh, (), cand_pspec=cand_spec_1d
+        )
+    else:
+        retr = lambda p, b: recsys.twotower_retrieve(
+            cfg, p, b, 100, use_mesh, (), cand_pspec=cand_spec_1d
+        )
+    fn = jax.jit(
+        retr, in_shardings=(_shardings(mesh, p_spec), _shardings(mesh, batch_spec))
+    )
+    return BuiltStep(fn, (params_abs, batch_abs), meta)
+
+
+# ==========================================================================
+# search family (the paper's engine)
+# ==========================================================================
+def build_search_step(arch: ArchSpec, shape: ShapeSpec, mesh) -> BuiltStep:
+    """REPRO_SEARCH_COMPRESSED: ''/unset = baseline (3x int32 streams);
+    'offsets' = uint8 fragment offsets; 'delta' = offsets + block-delta
+    uint16 keys (§Perf hillclimb iterations)."""
+    import os
+
+    from repro.core.jax_search import (
+        make_qt1_serve_step,
+        make_qt1_serve_step_compressed,
+    )
+
+    cfg = arch.model_cfg
+    dims = shape.dims
+    B, L, K = dims["batch"], dims["postings"], cfg.n_keys
+    mode = os.environ.get("REPRO_SEARCH_COMPRESSED", "")
+    meta = {"n_layers": 1, "model_params": 0, "postings": B * K * L, "search_mode": mode or "baseline"}
+    if mode == "delta":
+        fn = make_qt1_serve_step_compressed(mesh, top_k=cfg.top_k, delta_g=True)
+        args = (
+            jax.ShapeDtypeStruct((B, K, L // 64), I32),
+            jax.ShapeDtypeStruct((B, K, L), jnp.uint16),
+            jax.ShapeDtypeStruct((B, K, L), jnp.uint8),
+            jax.ShapeDtypeStruct((B, K, L), jnp.uint8),
+            jax.ShapeDtypeStruct((B,), F32),
+            jax.ShapeDtypeStruct((B,), F32),
+        )
+        return BuiltStep(fn, args, meta)
+    if mode == "offsets":
+        fn = make_qt1_serve_step_compressed(mesh, top_k=cfg.top_k, delta_g=False)
+        args = (
+            jax.ShapeDtypeStruct((B, K, 1), I32),
+            jax.ShapeDtypeStruct((B, K, L), I32),
+            jax.ShapeDtypeStruct((B, K, L), jnp.uint8),
+            jax.ShapeDtypeStruct((B, K, L), jnp.uint8),
+            jax.ShapeDtypeStruct((B,), F32),
+            jax.ShapeDtypeStruct((B,), F32),
+        )
+        return BuiltStep(fn, args, meta)
+    fn = make_qt1_serve_step(mesh, top_k=cfg.top_k)
+    args = (
+        jax.ShapeDtypeStruct((B, K, L), I32),
+        jax.ShapeDtypeStruct((B, K, L), I32),
+        jax.ShapeDtypeStruct((B, K, L), I32),
+        jax.ShapeDtypeStruct((B,), F32),
+        jax.ShapeDtypeStruct((B,), F32),
+    )
+    return BuiltStep(fn, args, meta)
+
+
+# ==========================================================================
+# dispatch + concrete-input materialization (smoke tests / examples)
+# ==========================================================================
+def build_step(arch: ArchSpec, shape_name: str, mesh) -> BuiltStep:
+    shape = arch.shapes[shape_name]
+    builder = {
+        "lm": build_lm_step,
+        "gnn": build_gnn_step,
+        "recsys": build_recsys_step,
+        "search": build_search_step,
+    }[arch.family]
+    return builder(arch, shape, mesh)
+
+
+def materialize_inputs(arch: ArchSpec, shape_name: str, built: BuiltStep, seed: int = 0):
+    """Concrete inputs for running a built step on CPU: real param init +
+    range-correct synthetic batch (smoke tests and example drivers)."""
+    rng = np.random.default_rng(seed)
+    cfg = arch.model_cfg
+    shape = arch.shapes[shape_name]
+    key = jax.random.key(seed)
+
+    def synth_batch(abs_tree):
+        def leaf(path, x):
+            name = str(getattr(path[-1], "key", "")) if path else ""
+            if np.issubdtype(np.dtype(x.dtype), np.integer):
+                hi = 4
+                if arch.family == "lm":
+                    hi = cfg.vocab
+                elif arch.family == "gnn":
+                    hi = shape.dims["n_nodes"] if name in ("src", "dst") else 4
+                elif arch.family == "recsys":
+                    hi = getattr(cfg, "n_cates", 4) if "cate" in name else getattr(cfg, "n_items", 4)
+                if x.shape == ():
+                    return jnp.zeros((), x.dtype)
+                return jnp.asarray(rng.integers(0, max(hi, 2), x.shape), x.dtype)
+            if "mask" in name:
+                return jnp.ones(x.shape, x.dtype)
+            if name == "log_q":
+                return jnp.zeros(x.shape, x.dtype)
+            return jnp.asarray(rng.normal(0, 0.5, x.shape), x.dtype)
+
+        return jax.tree_util.tree_map_with_path(leaf, abs_tree)
+
+    if arch.family == "lm":
+        params = transformer.init_params(cfg, key)
+        if shape.kind == "train":
+            return (params, init_opt_state(params), synth_batch(built.args[2]))
+        params = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            params,
+        )
+        return (params,) + tuple(synth_batch(a) for a in built.args[1:])
+    if arch.family == "gnn":
+        dims = shape.dims
+        gcfg = replace(cfg, d_feat=dims["d_feat"])
+        params = gnn.init_params(gcfg, key)
+        opt = init_opt_state(params)
+        return (params, opt, synth_batch(built.args[2]))
+    if arch.family == "recsys":
+        init = {
+            recsys.SeqRecConfig: recsys.seqrec_init,
+            recsys.DINConfig: recsys.din_init,
+            recsys.TwoTowerConfig: recsys.twotower_init,
+        }[type(cfg)]
+        params = init(cfg, key)
+        rest = built.args[1:]
+        if shape.kind == "train":
+            return (params, init_opt_state(params), synth_batch(rest[1]))
+        return (params, synth_batch(rest[0]))
+    # search: sorted posting arrays with sentinel padding
+    from repro.kernels.common import SENTINEL
+
+    B, K, L = built.args[0].shape
+    g = np.full((B, K, L), SENTINEL, np.int32)
+    lo = g.copy()
+    hi = g.copy()
+    for b in range(B):
+        base = np.sort(rng.choice(L * 4, size=L // 2, replace=False)).astype(np.int32)
+        for k in range(K):
+            n = rng.integers(L // 4, L // 2)
+            sub = np.sort(rng.choice(base, size=n, replace=False))
+            g[b, k, :n] = sub
+            lo[b, k, :n] = sub - rng.integers(0, 5, n).astype(np.int32)
+            hi[b, k, :n] = sub + rng.integers(0, 5, n).astype(np.int32)
+    idf = rng.uniform(1, 5, B).astype(np.float32)
+    span = np.full(B, 3.0, np.float32)
+    return tuple(map(jnp.asarray, (g, lo, hi, idf, span)))

@@ -1,0 +1,323 @@
+"""RecSys architectures: BERT4Rec, SASRec, DIN, Two-Tower retrieval.
+
+Common substrate: huge row-sharded embedding tables (models/embedding.py),
+small dense towers, sampled-softmax training (full-vocab softmax at
+vocab ~10^6-10^7 and batch 65536 is neither feasible nor how these systems
+train). Sequential models reuse the transformer attention blocks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.embedding import (
+    embedding_bag_sum,
+    embedding_lookup,
+    sharded_embedding_bag,
+    sharded_embedding_lookup,
+)
+from repro.models.layers import (
+    attention_block,
+    dense,
+    init_attention,
+    init_dense,
+    init_mlp,
+    init_norm,
+    apply_norm,
+    mlp_block,
+)
+
+
+def _lookup(table, ids, mesh, dp_axes):
+    if mesh is None or mesh.shape.get("model", 1) == 1 or table.shape[0] % mesh.shape["model"]:
+        return embedding_lookup(table, ids)
+    return sharded_embedding_lookup(table, ids, mesh, dp_axes=dp_axes)
+
+
+# ==========================================================================
+# Sequential recommenders (BERT4Rec / SASRec)
+# ==========================================================================
+@dataclass(frozen=True)
+class SeqRecConfig:
+    name: str
+    n_items: int
+    embed_dim: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    causal: bool  # SASRec: True; BERT4Rec: False (bidirectional)
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.n_heads
+
+
+def seqrec_init(cfg: SeqRecConfig, key):
+    ks = jax.random.split(key, 2 + 2 * cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        blocks.append(
+            {
+                "ln1": init_norm(cfg.embed_dim, "layernorm"),
+                "ln2": init_norm(cfg.embed_dim, "layernorm"),
+                "attn": init_attention(
+                    ks[2 + 2 * i], cfg.embed_dim, cfg.n_heads, cfg.n_heads, cfg.head_dim, True
+                ),
+                "mlp": init_mlp(ks[3 + 2 * i], cfg.embed_dim, 4 * cfg.embed_dim),
+            }
+        )
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, cfg.embed_dim), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, cfg.embed_dim), jnp.float32) * 0.02,
+        "final_ln": init_norm(cfg.embed_dim, "layernorm"),
+        "blocks": blocks,
+    }
+
+
+def seqrec_user_state(cfg: SeqRecConfig, params, hist, mesh=None, dp_axes=("data",)):
+    """hist (B, S) item ids (-1 pad) -> user state (B, D)."""
+    x = _lookup(params["item_emb"], hist, mesh, dp_axes)
+    x = x + params["pos_emb"][None, : x.shape[1]].astype(x.dtype)
+
+    def body(x, p_b):
+        h, _ = attention_block(
+            p_b["attn"],
+            apply_norm(x, p_b["ln1"], "layernorm"),
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_heads,
+            d_head=cfg.head_dim,
+            rotary_pct=0.0,
+            causal=cfg.causal,
+        )
+        x = x + h
+        x = x + mlp_block(p_b["mlp"], apply_norm(x, p_b["ln2"], "layernorm"))
+        return x, ()
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=True)  # <=2 blocks
+    x = apply_norm(x, params["final_ln"], "layernorm")
+    return x[:, -1]  # next-item state
+
+
+def seqrec_loss(cfg: SeqRecConfig, params, batch, mesh=None, dp_axes=("data",)):
+    """Sampled softmax: target at slot 0 vs provided negatives."""
+    u = seqrec_user_state(cfg, params, batch["hist"], mesh, dp_axes)
+    cand = jnp.concatenate([batch["target"][:, None], batch["negatives"]], axis=1)
+    c = _lookup(params["item_emb"], cand, mesh, dp_axes)  # (B, 1+N, D)
+    logits = jnp.einsum("bd,bnd->bn", u, c).astype(jnp.float32)
+    return -jax.nn.log_softmax(logits, axis=-1)[:, 0].mean()
+
+
+def seqrec_score(cfg: SeqRecConfig, params, batch, mesh=None, dp_axes=("data",)):
+    """Score candidate items: hist (B,S) x candidates (B,C) -> (B,C)."""
+    u = seqrec_user_state(cfg, params, batch["hist"], mesh, dp_axes)
+    c = _lookup(params["item_emb"], batch["candidates"], mesh, dp_axes)
+    return jnp.einsum("bd,bcd->bc", u, c)
+
+
+# ==========================================================================
+# DIN — Deep Interest Network (target attention CTR model)
+# ==========================================================================
+@dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 10_000_000
+    n_cates: int = 100_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    d_user: int = 16
+
+
+def din_init(cfg: DINConfig, key):
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim * 2  # item ++ cate
+    attn_in = 4 * d
+    p = {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, cfg.embed_dim), jnp.float32) * 0.02,
+        "cate_emb": jax.random.normal(ks[1], (cfg.n_cates, cfg.embed_dim), jnp.float32) * 0.02,
+        "attn1": init_dense(ks[2], attn_in, cfg.attn_mlp[0]),
+        "attn2": init_dense(ks[3], cfg.attn_mlp[0], cfg.attn_mlp[1]),
+        "attn3": init_dense(ks[4], cfg.attn_mlp[1], 1),
+        "mlp1": init_dense(ks[5], 3 * d + cfg.d_user, cfg.mlp[0]),
+        "mlp2": init_dense(ks[6], cfg.mlp[0], cfg.mlp[1]),
+        "out": init_dense(ks[7], cfg.mlp[1], 1),
+    }
+    return p
+
+
+def _din_emb(cfg, params, items, cates, mesh, dp_axes):
+    ei = _lookup(params["item_emb"], items, mesh, dp_axes)
+    ec = _lookup(params["cate_emb"], cates, mesh, dp_axes)
+    return jnp.concatenate([ei, ec], axis=-1)
+
+
+def din_forward(cfg: DINConfig, params, batch, mesh=None, dp_axes=("data",)):
+    """batch: hist_items/cates (B,S), target_item/cate (B,), user_feats (B,d_user)."""
+    eh = _din_emb(cfg, params, batch["hist_items"], batch["hist_cates"], mesh, dp_axes)
+    et = _din_emb(cfg, params, batch["target_item"], batch["target_cate"], mesh, dp_axes)
+    et_b = et[:, None, :]  # (B, 1, d)
+    feats = jnp.concatenate(
+        [eh, jnp.broadcast_to(et_b, eh.shape), eh - et_b, eh * et_b], axis=-1
+    )
+    a = jax.nn.silu(dense(params["attn1"], feats))
+    a = jax.nn.silu(dense(params["attn2"], a))
+    w = dense(params["attn3"], a)[..., 0]  # (B, S) target-attention weights
+    w = jnp.where(batch["hist_items"] >= 0, w, -1e30)
+    w = jax.nn.softmax(w.astype(jnp.float32), axis=-1).astype(eh.dtype)
+    interest = jnp.einsum("bs,bsd->bd", w, eh)
+    z = jnp.concatenate([interest, et, interest * et, batch["user_feats"].astype(et.dtype)], axis=-1)
+    z = jax.nn.silu(dense(params["mlp1"], z))
+    z = jax.nn.silu(dense(params["mlp2"], z))
+    return dense(params["out"], z)[:, 0]  # logit (B,)
+
+
+def din_loss(cfg: DINConfig, params, batch, mesh=None, dp_axes=("data",)):
+    logit = din_forward(cfg, params, batch, mesh, dp_axes)
+    y = batch["labels"].astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# ==========================================================================
+# Two-tower retrieval
+# ==========================================================================
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_items: int = 10_000_000
+    n_cates: int = 100_000
+    embed_dim: int = 256
+    tower: tuple = (1024, 512, 256)
+    hist_len: int = 50
+    d_user: int = 64
+
+
+def twotower_init(cfg: TwoTowerConfig, key):
+    ks = jax.random.split(key, 10)
+    d = cfg.embed_dim
+
+    def tower(k, d_in):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "l1": init_dense(k1, d_in, cfg.tower[0]),
+            "l2": init_dense(k2, cfg.tower[0], cfg.tower[1]),
+            "l3": init_dense(k3, cfg.tower[1], cfg.tower[2]),
+        }
+
+    return {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, d), jnp.float32) * 0.02,
+        "cate_emb": jax.random.normal(ks[1], (cfg.n_cates, d), jnp.float32) * 0.02,
+        "user_tower": tower(ks[2], d + cfg.d_user),
+        "item_tower": tower(ks[3], 2 * d),
+    }
+
+
+def _tower(p, x):
+    x = jax.nn.silu(dense(p["l1"], x))
+    x = jax.nn.silu(dense(p["l2"], x))
+    x = dense(p["l3"], x)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_user(cfg, params, batch, mesh=None, dp_axes=("data",), bag_pspec=None):
+    if mesh is None or mesh.shape.get("model", 1) == 1:
+        hist = embedding_bag_sum(params["item_emb"], batch["hist"])
+    else:
+        hist = sharded_embedding_bag(
+            params["item_emb"], batch["hist"], mesh, dp_axes=dp_axes, ids_pspec=bag_pspec
+        )
+    x = jnp.concatenate([hist, batch["user_feats"].astype(hist.dtype)], axis=-1)
+    return _tower(params["user_tower"], x)
+
+
+def twotower_item(cfg, params, item_ids, cate_ids, mesh=None, dp_axes=("data",)):
+    ei = _lookup(params["item_emb"], item_ids, mesh, dp_axes)
+    ec = _lookup(params["cate_emb"], cate_ids, mesh, dp_axes)
+    return _tower(params["item_tower"], jnp.concatenate([ei, ec], axis=-1))
+
+
+def twotower_loss(cfg: TwoTowerConfig, params, batch, mesh=None, dp_axes=("data",)):
+    """In-batch sampled softmax with logQ correction (Yi et al., RecSys'19)."""
+    u = twotower_user(cfg, params, batch, mesh, dp_axes)  # (B, D)
+    v = twotower_item(cfg, params, batch["item"], batch["cate"], mesh, dp_axes)  # (B, D)
+    logits = (u @ v.T).astype(jnp.float32) * 20.0  # temperature
+    logits = logits - batch["log_q"][None, :]  # sampling correction
+    labels = jnp.arange(u.shape[0])
+    return -jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), labels[:, None], axis=1
+    ).mean()
+
+
+def din_retrieval(cfg: DINConfig, params, batch, top_k: int = 100, mesh=None, dp_axes=("data",), cand_pspec=None):
+    """Score one user against C candidates (retrieval_cand shape): the
+    history embedding is computed once; the candidate axis is sharded."""
+    from repro.models.embedding import sharded_embedding_lookup
+
+    def lk(table, ids, pspec=None):
+        if mesh is None or mesh.shape.get("model", 1) == 1 or table.shape[0] % mesh.shape["model"]:
+            return embedding_lookup(table, ids)
+        return sharded_embedding_lookup(table, ids, mesh, dp_axes=dp_axes, ids_pspec=pspec)
+
+    eh = jnp.concatenate(
+        [lk(params["item_emb"], batch["hist_items"], P(None, None)),
+         lk(params["cate_emb"], batch["hist_cates"], P(None, None))], axis=-1
+    )  # (1, S, d)
+    et = jnp.concatenate(
+        [lk(params["item_emb"], batch["cand_items"], cand_pspec),
+         lk(params["cate_emb"], batch["cand_cates"], cand_pspec)], axis=-1
+    )  # (C, d)
+    C = et.shape[0]
+    ehb = eh[0][None]  # (1, S, d)
+    et_b = et[:, None, :]  # (C, 1, d)
+    feats = jnp.concatenate(
+        [jnp.broadcast_to(ehb, (C,) + eh.shape[1:]),
+         jnp.broadcast_to(et_b, (C,) + eh.shape[1:]),
+         ehb - et_b, ehb * et_b], axis=-1
+    )
+    a = jax.nn.silu(dense(params["attn1"], feats))
+    a = jax.nn.silu(dense(params["attn2"], a))
+    w = dense(params["attn3"], a)[..., 0]
+    w = jnp.where(batch["hist_items"][0][None, :] >= 0, w, -1e30)
+    w = jax.nn.softmax(w.astype(jnp.float32), axis=-1).astype(eh.dtype)
+    interest = jnp.einsum("cs,csd->cd", w, jnp.broadcast_to(ehb, (C,) + eh.shape[1:]))
+    uf = jnp.broadcast_to(batch["user_feats"].astype(et.dtype), (C, batch["user_feats"].shape[-1]))
+    z = jnp.concatenate([interest, et, interest * et, uf], axis=-1)
+    z = jax.nn.silu(dense(params["mlp1"], z))
+    z = jax.nn.silu(dense(params["mlp2"], z))
+    scores = dense(params["out"], z)[:, 0]
+    return jax.lax.top_k(scores[None, :], top_k)
+
+
+def twotower_score(cfg: TwoTowerConfig, params, batch, mesh=None, dp_axes=("data",)):
+    """Pointwise (user, item) scoring for online serving."""
+    u = twotower_user(cfg, params, batch, mesh, dp_axes)
+    v = twotower_item(cfg, params, batch["item"], batch["cate"], mesh, dp_axes)
+    return jnp.sum(u * v, axis=-1)
+
+
+def twotower_retrieve(cfg: TwoTowerConfig, params, batch, top_k: int = 100,
+                      mesh=None, dp_axes=("data",), cand_pspec=None):
+    """One query against a large candidate set: candidate axis sharded
+    across the whole mesh; item-tower compute is fully parallel; the final
+    dot + top-k reduce is a (1, C) score vector."""
+    from repro.models.embedding import sharded_embedding_lookup
+
+    u = twotower_user(cfg, params, batch, mesh, dp_axes, bag_pspec=P(None, None))  # (1, D)
+    if mesh is None or mesh.shape.get("model", 1) == 1:
+        v = twotower_item(cfg, params, batch["cand_items"], batch["cand_cates"])
+    else:
+        ei = sharded_embedding_lookup(params["item_emb"], batch["cand_items"], mesh,
+                                      dp_axes=dp_axes, ids_pspec=cand_pspec)
+        ec = sharded_embedding_lookup(params["cate_emb"], batch["cand_cates"], mesh,
+                                      dp_axes=dp_axes, ids_pspec=cand_pspec)
+        v = _tower(params["item_tower"], jnp.concatenate([ei, ec], axis=-1))
+    scores = jnp.einsum("qd,cd->qc", u, v)
+    return jax.lax.top_k(scores, top_k)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see exactly 1 CPU device (the dry-run sets 512 in its own
+# process); make imports work without installing the package.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

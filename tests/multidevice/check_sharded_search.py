@@ -1,0 +1,50 @@
+"""Multi-device integration check: doc-sharded QT1 serving on a (2,4) mesh
+must agree with the single-device reference engine. Run via
+test_jax_search.py::test_doc_sharded_serving_multidevice."""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core.index_builder import build_index  # noqa: E402
+from repro.core.jax_search import (  # noqa: E402
+    decode_results,
+    make_qt1_serve_step,
+    pack_qt1_batch,
+)
+from repro.core.search import ProximitySearchEngine  # noqa: E402
+from repro.data.corpus import generate_corpus, sample_stop_queries  # noqa: E402
+
+
+def main() -> None:
+    table, lex = generate_corpus(n_docs=80, mean_doc_len=70, vocab_size=500, seed=11)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    idx = build_index(table, lex, max_distance=5)
+    queries = sample_stop_queries(table, lex, 16, window=5, seed=4)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    step = jax.jit(make_qt1_serve_step(mesh, top_k=512))
+    batch = pack_qt1_batch(idx, queries, L=2048, K=2, doc_shards=4)
+    decoded = decode_results(batch, *step(*batch.device_args()))
+
+    eng = ProximitySearchEngine(idx, top_k=100_000, equalize_mode="bulk")
+    for qi, q in enumerate(queries):
+        res, _ = eng.search_ids(q)
+        want = set(zip(res.doc.tolist(), res.start.tolist(), res.end.tolist()))
+        got = set(
+            zip(
+                decoded[qi]["doc"].tolist(),
+                decoded[qi]["start"].tolist(),
+                decoded[qi]["end"].tolist(),
+            )
+        )
+        assert got == want, (qi, q, got ^ want)
+    print("SHARDED_SEARCH_OK")
+
+
+if __name__ == "__main__":
+    main()

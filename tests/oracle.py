@@ -1,0 +1,84 @@
+"""Brute-force oracles for search semantics (see core/search.py docstring).
+
+The oracle answers: which documents match a sub-query? A document matches
+iff there is an occurrence `a` of the anchor lemma (the smallest lemma id
+in the query) such that every query lemma has the required number of
+*distinct* positions within MaxDistance of `a` (the anchor's own position
+counts for its lemma).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.corpus import TokenTable
+
+
+def _doc_positions(table: TokenTable, doc: int, lemma: int) -> np.ndarray:
+    m = (table.doc_ids == doc) & (table.lemma_ids == lemma)
+    return np.unique(table.positions[m])
+
+
+def matching_docs(table: TokenTable, lemma_ids: list[int], d: int, anchor: int | None = None) -> set[int]:
+    mult: dict[int, int] = {}
+    for l in lemma_ids:
+        mult[l] = mult.get(l, 0) + 1
+    if anchor is None:
+        anchor = min(mult)  # QT1 rule: most frequent lemma
+    docs = set()
+    cand_docs = np.unique(table.doc_ids[table.lemma_ids == anchor])
+    for doc in cand_docs.tolist():
+        a_pos = _doc_positions(table, doc, anchor)
+        per_lemma = {l: _doc_positions(table, doc, l) for l in mult}
+        for a in a_pos.tolist():
+            ok = True
+            for l, r in mult.items():
+                pos = per_lemma[l]
+                within = pos[(pos >= a - d) & (pos <= a + d)]
+                if within.size < r:
+                    ok = False
+                    break
+            if ok:
+                docs.add(int(doc))
+                break
+    return docs
+
+
+def matching_anchor_count(table: TokenTable, lemma_ids: list[int], d: int) -> int:
+    """Total matching anchor occurrences across the corpus."""
+    mult: dict[int, int] = {}
+    for l in lemma_ids:
+        mult[l] = mult.get(l, 0) + 1
+    anchor = min(mult)
+    total = 0
+    cand_docs = np.unique(table.doc_ids[table.lemma_ids == anchor])
+    for doc in cand_docs.tolist():
+        a_pos = _doc_positions(table, doc, anchor)
+        per_lemma = {l: _doc_positions(table, doc, l) for l in mult}
+        for a in a_pos.tolist():
+            ok = True
+            for l, r in mult.items():
+                pos = per_lemma[l]
+                within = pos[(pos >= a - d) & (pos <= a + d)]
+                if within.size < r:
+                    ok = False
+                    break
+            if ok:
+                total += 1
+    return total
+
+
+def fragment_is_valid(table: TokenTable, lemma_ids: list[int], d: int, doc: int, start: int, end: int) -> bool:
+    """Every query lemma occurs (with multiplicity) inside [start,end] and
+    the fragment is no wider than the 2*MaxDistance guarantee."""
+    if end - start > 2 * d:
+        return False
+    mult: dict[int, int] = {}
+    for l in lemma_ids:
+        mult[l] = mult.get(l, 0) + 1
+    for l, r in mult.items():
+        pos = _doc_positions(table, doc, l)
+        inside = pos[(pos >= start) & (pos <= end)]
+        if inside.size < r:
+            return False
+    return True

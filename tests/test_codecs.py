@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codecs import (
+    delta_decode,
+    delta_encode,
+    varbyte_decode,
+    varbyte_encode,
+    zigzag_decode,
+    zigzag_encode,
+)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**63 - 1), max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_varbyte_roundtrip(values):
+    arr = np.array(values, np.uint64)
+    assert np.array_equal(varbyte_decode(varbyte_encode(arr)), arr)
+
+
+@given(st.lists(st.integers(min_value=-(2**62), max_value=2**62), max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_zigzag_roundtrip(values):
+    arr = np.array(values, np.int64)
+    assert np.array_equal(zigzag_decode(zigzag_encode(arr)), arr)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**40), min_size=1, max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_delta_roundtrip_sorted(values):
+    arr = np.sort(np.array(values, np.int64))
+    assert np.array_equal(delta_decode(delta_encode(arr)), arr)
+
+
+def test_varbyte_empty():
+    assert varbyte_encode(np.zeros(0, np.uint64)) == b""
+    assert varbyte_decode(b"").size == 0
+
+
+def test_varbyte_compression_small_values():
+    arr = np.arange(100, dtype=np.uint64)
+    assert len(varbyte_encode(arr)) == 100  # 1 byte each
+
+
+def test_postings_roundtrip():
+    from repro.core.postings import decode_postings, encode_postings
+
+    rng = np.random.default_rng(0)
+    n = 500
+    docs = np.sort(rng.integers(0, 50, n))
+    pos = rng.integers(0, 1000, n)
+    # positions sorted within doc runs
+    order = np.lexsort((pos, docs))
+    docs, pos = docs[order].astype(np.int64), pos[order].astype(np.int64)
+    extra = rng.integers(0, 20, n).astype(np.int64)
+    blob = encode_postings([docs, pos, extra.astype(np.uint64)])
+    d2, p2, e2 = decode_postings(blob, 3)
+    assert np.array_equal(d2, docs)
+    assert np.array_equal(p2, pos)
+    assert np.array_equal(e2, extra)
+
+
+def test_nsw_roundtrip():
+    from repro.core.nsw import decode_nsw_stream, encode_nsw_stream
+
+    rng = np.random.default_rng(1)
+    n_records = 40
+    e = 120
+    rows = np.sort(rng.integers(0, n_records, e))
+    fls = rng.integers(0, 700, e)
+    offs = rng.integers(-5, 6, e)
+    offs[offs == 0] = 1
+    blob = encode_nsw_stream(rows, fls, offs, n_records)
+    r2, f2, o2 = decode_nsw_stream(blob, n_records)
+    # same multiset per record
+    a = sorted(zip(rows.tolist(), fls.tolist(), offs.tolist()))
+    b = sorted(zip(r2.tolist(), f2.tolist(), o2.tolist()))
+    assert a == b

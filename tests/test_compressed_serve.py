@@ -1,0 +1,52 @@
+"""§Perf hillclimb C: compressed posting payloads must return identical
+results to the baseline serve step."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.index_builder import build_index
+from repro.core.jax_search import (
+    compress_qt1_batch,
+    decode_results,
+    make_qt1_serve_step,
+    make_qt1_serve_step_compressed,
+    pack_qt1_batch,
+)
+from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=80, mean_doc_len=70, vocab_size=500, seed=11)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    idx = build_index(table, lex, max_distance=5)
+    queries = sample_stop_queries(table, lex, 12, window=5, seed=4)
+    batch = pack_qt1_batch(idx, queries, L=2048, K=2)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    base_step = make_qt1_serve_step(mesh, top_k=256)
+    base = decode_results(batch, *base_step(*batch.device_args()))
+    return mesh, batch, base
+
+
+@pytest.mark.parametrize("delta_g", [False, True])
+def test_compressed_matches_baseline(world, delta_g):
+    mesh, batch, base = world
+    step = make_qt1_serve_step_compressed(mesh, top_k=256, delta_g=delta_g)
+    args = compress_qt1_batch(batch, delta_g=delta_g)
+    got = decode_results(batch, *step(*args))
+    for qi in range(len(base)):
+        b = set(zip(base[qi]["doc"].tolist(), base[qi]["start"].tolist(), base[qi]["end"].tolist()))
+        g = set(zip(got[qi]["doc"].tolist(), got[qi]["start"].tolist(), got[qi]["end"].tolist()))
+        assert b == g, (qi, b ^ g)
+
+
+def test_compressed_bytes_reduction(world):
+    mesh, batch, _ = world
+    base_bytes = sum(np.asarray(a).nbytes for a in batch.device_args())
+    for delta_g, expect_ratio in ((False, 1.8), (True, 2.5)):
+        args = compress_qt1_batch(batch, delta_g=delta_g)
+        comp_bytes = sum(np.asarray(a).nbytes for a in args)
+        assert base_bytes / comp_bytes > expect_ratio, (delta_g, base_bytes, comp_bytes)

@@ -1,0 +1,75 @@
+"""Equalize: heap (§2.3), basic ([10]) and bulk (vectorized) must agree."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.equalize import (
+    EqualizeState,
+    PostingIterator,
+    bulk_align_docs,
+    equalize_basic,
+)
+
+
+def _mk_iters(doc_lists):
+    return [
+        PostingIterator(np.array(sorted(ds), np.int64), np.zeros(len(ds), np.int64))
+        for ds in doc_lists
+    ]
+
+
+def _drain_heap(doc_lists):
+    iters = _mk_iters(doc_lists)
+    st_ = EqualizeState(iters)
+    out = []
+    while (doc := st_.equalize()) is not None:
+        out.append(doc)
+        st_.advance_all_past_doc()
+    return out
+
+
+def _drain_basic(doc_lists):
+    iters = _mk_iters(doc_lists)
+    out = []
+    while (doc := equalize_basic(iters)) is not None:
+        out.append(doc)
+        for it in iters:
+            if not it.exhausted and it.value_id == doc:
+                it.advance_past_doc()
+    return out
+
+
+doc_list_strategy = st.lists(
+    st.lists(st.integers(0, 60), min_size=1, max_size=80), min_size=1, max_size=6
+)
+
+
+@given(doc_list_strategy)
+@settings(max_examples=150, deadline=None)
+def test_equalize_modes_agree(doc_lists):
+    expected = sorted(set.intersection(*[set(ds) for ds in doc_lists]))
+    assert _drain_heap(doc_lists) == expected
+    assert _drain_basic(doc_lists) == expected
+    bulk = bulk_align_docs([np.array(sorted(ds), np.int64) for ds in doc_lists])
+    assert bulk.tolist() == expected
+
+
+@given(doc_list_strategy)
+@settings(max_examples=50, deadline=None)
+def test_equalize_no_gallop_agrees(doc_lists):
+    """The paper's literal step-3 (IT.Next, no galloping) must agree too."""
+    iters = _mk_iters(doc_lists)
+    st_ = EqualizeState(iters)
+    out = []
+    while (doc := st_.equalize(gallop=False)) is not None:
+        out.append(doc)
+        st_.advance_all_past_doc()
+    expected = sorted(set.intersection(*[set(ds) for ds in doc_lists]))
+    assert out == expected
+
+
+def test_duplicate_docs_within_list():
+    # multiple postings per document (common in position lists)
+    doc_lists = [[1, 1, 2, 5, 5, 9], [1, 5, 5, 5], [0, 1, 5, 9, 9]]
+    assert _drain_heap(doc_lists) == [1, 5]
+    assert _drain_basic(doc_lists) == [1, 5]

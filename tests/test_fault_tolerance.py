@@ -1,0 +1,195 @@
+"""Checkpoint/restart, elastic restore, straggler detection, and
+compressed gradient sync."""
+
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import (
+    AsyncCheckpointer,
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.fault_tolerance import (
+    FailureInjector,
+    InjectedFailure,
+    StragglerDetector,
+    TrainSupervisor,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layers": {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)},
+        "step": jnp.asarray(3, jnp.int32),
+        "list": [jnp.ones(2), jnp.zeros(3)],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 7, tree, {"note": "x"})
+    assert latest_step(tmp_path) == 7
+    restored, manifest = restore_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, tree))
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_partial_write(tmp_path):
+    """A stale .tmp dir (crash mid-write) must not be visible as latest."""
+    tree = _tree()
+    save_checkpoint(tmp_path, 1, tree)
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_checkpoint_gc(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        save_checkpoint(tmp_path, s, tree)
+    gc_checkpoints(tmp_path, keep=2)
+    assert latest_step(tmp_path) == 5
+    remaining = sorted(d.name for d in tmp_path.iterdir())
+    assert len(remaining) == 2
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Save unsharded, restore onto a (1,2)-mesh sharding."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(tmp_path, 0, tree)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    restored, _ = restore_checkpoint(
+        tmp_path, tree, mesh=mesh, pspecs={"w": P("model", None)}
+    )
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path, keep=2)
+    tree = _tree()
+    for s in (0, 1, 2):
+        ck.save(s, tree)
+    ck.wait()
+    assert latest_step(tmp_path) == 2
+
+
+def test_supervisor_restart_recovers_exactly(tmp_path):
+    """Inject failures; the run must complete with identical final state
+    to a failure-free run (checkpoint + deterministic replay)."""
+
+    def mk_sup(inject, ckpt_dir):
+        def init():
+            return {"x": jnp.zeros(4), "n": jnp.asarray(0, jnp.int32)}
+
+        def batch_fn(step):
+            rng = np.random.default_rng(step)
+            return jnp.asarray(rng.normal(size=4), jnp.float32)
+
+        def step_fn(state, batch):
+            new = {"x": state["x"] + batch, "n": state["n"] + 1}
+            return new, {"loss": float(jnp.sum(new["x"] ** 2))}
+
+        return TrainSupervisor(
+            step_fn, batch_fn, init, ckpt_dir, ckpt_every=5,
+            injector=FailureInjector(inject),
+        )
+
+    sup_clean = mk_sup({}, tmp_path / "clean")
+    rep_clean = sup_clean.run(23)
+
+    sup_fail = mk_sup({7: "node_loss", 12: "preemption", 19: "oom"}, tmp_path / "faulty")
+    rep_fail = sup_fail.run(23)
+    assert rep_fail.restarts == 3
+    assert rep_fail.final_step == rep_clean.final_step == 22
+    # bit-exact final loss despite three crashes
+    assert rep_fail.losses[-1] == rep_clean.losses[-1]
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    def init():
+        return {"x": jnp.zeros(2)}
+
+    sup = TrainSupervisor(
+        step_fn=lambda s, b: (s, {"loss": 1.0}),
+        batch_fn=lambda step: None,
+        init_state_fn=init,
+        ckpt_dir=tmp_path,
+        max_restarts=2,
+        injector=FailureInjector({0: "a", 1: "b", 2: "c", 3: "d"}),
+    )
+    # failures re-fire at steps never checkpointed past -> exhausts retries
+    sup.injector.fired = set()
+
+    class AlwaysFail(FailureInjector):
+        def maybe_fail(self, step):
+            if step == 0:
+                raise InjectedFailure("always")
+
+    sup.injector = AlwaysFail()
+    with pytest.raises(RuntimeError):
+        sup.run(5)
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=16, tolerance=2.0, warmup=4)
+    for i in range(10):
+        det.observe(i, 0.10)
+    ev = det.observe(10, 0.35)
+    assert ev is not None and ev.step == 10
+    assert det.observe(11, 0.11) is None
+
+
+def test_int8_compression_accuracy():
+    from repro.train.grad_compression import dequantize_int8, quantize_int8
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)).max()
+    assert err <= float(s) * 0.51 + 1e-6
+
+
+def test_topk_error_feedback_invariant():
+    """g + err_old == scattered(sel) + err_new (nothing is lost)."""
+    from repro.train.grad_compression import topk_sparsify
+
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    err = jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32)
+    sel, idx, new_err = topk_sparsify(g, err, k=8)
+    dense = np.zeros(64, np.float32)
+    dense[np.asarray(idx)] = np.asarray(sel)
+    np.testing.assert_allclose(
+        np.asarray(g) + np.asarray(err), dense + np.asarray(new_err), rtol=1e-6
+    )
+
+
+def test_compressed_dp_train_step_multidevice():
+    """int8-compressed DP training on 4 fake devices matches the exact-DP
+    loss trajectory to within quantization noise (subprocess: needs >1
+    device)."""
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    script = Path(__file__).parent / "multidevice" / "check_compressed_dp.py"
+    env = dict(
+        PYTHONPATH=str(Path(__file__).parent.parent / "src"),
+        PATH="/usr/bin:/bin", HOME="/root",
+    )
+    proc = subprocess.run(
+        [sys.executable, str(script)], capture_output=True, text=True, env=env, timeout=300
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "COMPRESSED_DP_OK" in proc.stdout

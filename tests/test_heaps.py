@@ -1,0 +1,69 @@
+"""Property tests for the paper §2.3 binary heaps."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heaps import IteratorHeap
+
+
+class FakeIter:
+    __slots__ = ("value_id", "min_index", "max_index")
+
+    def __init__(self, v):
+        self.value_id = v
+        self.min_index = 0
+        self.max_index = 0
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_insert_maintains_invariant_and_min(values):
+    h = IteratorHeap(len(values), "min")
+    g = IteratorHeap(len(values), "max")
+    its = [FakeIter(v) for v in values]
+    for it in its:
+        h.insert(it)
+        g.insert(it)
+        assert h.check_invariant()
+        assert g.check_invariant()
+    assert h.get_min().value_id == min(values)
+    assert g.get_min().value_id == max(values)
+
+
+@given(
+    st.lists(st.integers(0, 100), min_size=2, max_size=20),
+    st.lists(st.tuples(st.integers(0, 19), st.integers(1, 50)), max_size=40),
+)
+@settings(max_examples=100, deadline=None)
+def test_update_after_value_changes(values, updates):
+    """Simulates IT.next(): bump an iterator's doc id, call Update on both
+    heaps via the back-pointer fields, check invariants + extrema."""
+    its = [FakeIter(v) for v in values]
+    h = IteratorHeap(len(values), "min")
+    g = IteratorHeap(len(values), "max")
+    for it in its:
+        h.insert(it)
+        g.insert(it)
+    for idx, delta in updates:
+        it = its[idx % len(its)]
+        it.value_id += delta  # iterators only move forward
+        h.update(it.min_index)
+        g.update(it.max_index)
+        assert h.check_invariant(), "MinHeap invariant broken"
+        assert g.check_invariant(), "MaxHeap invariant broken"
+        cur = [x.value_id for x in its]
+        assert h.get_min().value_id == min(cur)
+        assert g.get_min().value_id == max(cur)
+
+
+def test_paper_example_three_iterators():
+    """Fig. 4: IT1.ID=3, IT2.ID=10, IT3.ID=5."""
+    it1, it2, it3 = FakeIter(3), FakeIter(10), FakeIter(5)
+    mn, mx = IteratorHeap(3, "min"), IteratorHeap(3, "max")
+    for it in (it1, it2, it3):
+        mn.insert(it)
+        mx.insert(it)
+    assert mn.get_min() is it1  # first cell of MinHeap array
+    assert mx.get_min() is it2  # first cell of MaxHeap array
+    assert it1.min_index == 1
+    assert it2.max_index == 1

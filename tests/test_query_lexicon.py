@@ -1,0 +1,100 @@
+import numpy as np
+
+from repro.core.lemmatizer import lemmatize_text, lemmatize_word, tokenize
+from repro.core.lexicon import Lexicon, LemmaType, UNKNOWN_FL
+from repro.core.query import (
+    QueryType,
+    build_subqueries,
+    classify,
+    select_fst_keys,
+    select_wv_keys,
+)
+
+
+def test_paper_lemmatization_examples():
+    # §1.1: "tinged" -> [ting, tinge]; "are" -> [are, be]; "mine" -> [mine, my]
+    assert set(lemmatize_word("tinged")) == {"ting", "tinge"}
+    assert set(lemmatize_word("are")) == {"are", "be"}
+    assert set(lemmatize_word("mine")) == {"mine", "my"}
+    assert lemmatize_word("was") == ["be"]
+    assert lemmatize_word("familiar") == ["familiar"]
+    # excerpt from "Beyond the City" (paper §1.1)
+    lems = lemmatize_text("All was fresh around them, familiar and yet new, tinged with the beauty")
+    flat = [l for alts in lems for l in alts]
+    for expected in ["all", "be", "fresh", "around", "they", "familiar", "and", "yet", "new", "ting", "tinge", "with", "the", "beauty"]:
+        assert expected in flat, expected
+
+
+def test_fl_list_ordering_and_types():
+    docs = [["a"] * 50 + ["b"] * 20 + ["c"] * 5 + ["d"]]
+    lex = Lexicon.build(docs, sw_count=1, fu_count=1)
+    assert lex.lemmas[0] == "a" and lex.fl("a") == 0
+    assert lex.type_of("a") == LemmaType.STOP
+    assert lex.type_of("b") == LemmaType.FREQUENT
+    assert lex.type_of("c") == LemmaType.ORDINARY
+    assert lex.fl("zzz") == UNKNOWN_FL  # the paper's "~"
+
+
+def test_lexicon_save_load(tmp_path):
+    docs = [["x", "y", "x"], ["y", "x", "z"]]
+    lex = Lexicon.build(docs, sw_count=1, fu_count=1)
+    lex.save(tmp_path / "lex.json")
+    lex2 = Lexicon.load(tmp_path / "lex.json")
+    assert lex2.lemmas == lex.lemmas
+    assert lex2.fl("y") == lex.fl("y")
+    assert np.array_equal(lex2.counts, lex.counts)
+
+
+def test_classify_query_types():
+    docs = [["s"] * 100 + ["f"] * 50 + ["o"] * 2]
+    lex = Lexicon.build(docs, sw_count=1, fu_count=1)
+    s, f, o = lex.fl("s"), lex.fl("f"), lex.fl("o")
+    assert classify([s, s], lex) == QueryType.QT1
+    assert classify([f], lex) == QueryType.QT2
+    assert classify([o, o], lex) == QueryType.QT3
+    assert classify([f, o], lex) == QueryType.QT4
+    assert classify([s, o], lex) == QueryType.QT5
+    assert classify([s, f, o], lex) == QueryType.QT5
+
+
+def test_select_fst_keys_paper_example():
+    # FL numbers from the paper: who=293, are=268, you=47 (1-based there;
+    # only the relative order matters).
+    who, are, you = 293, 268, 47
+    f, keys = select_fst_keys([who, are, you, who])
+    assert f == you
+    assert set(keys) == {(you, are, who), (you, who, who)}
+
+
+def test_select_fst_keys_distinct_lemmas_no_spurious_multiplicity():
+    f, keys = select_fst_keys([0, 3, 7, 8])
+    assert f == 0
+    # no key may demand two occurrences of a lemma the query has once
+    for _, s, t in keys:
+        assert s != t
+    covered = {l for k in keys for l in k[1:]}
+    assert covered == {3, 7, 8}
+
+
+def test_select_fst_keys_three_lemmas():
+    f, keys = select_fst_keys([5, 2, 9])
+    assert f == 2 and keys == [(2, 5, 9)]
+
+
+def test_select_wv_keys():
+    assert select_wv_keys([4, 1, 3]) == [(1, 3), (1, 4)]
+    assert select_wv_keys([2, 8]) == [(2, 8)]
+
+
+def test_subquery_expansion_who_are_you_who():
+    # Table 1: two sub-queries (are -> are|be)
+    docs = [
+        (["who"] * 30 + ["are"] * 25 + ["be"] * 40 + ["you"] * 35) * 2
+    ]
+    lex = Lexicon.build(docs, sw_count=4, fu_count=0)
+    subs = build_subqueries("who are you who", lex)
+    assert len(subs) == 2
+    seqs = {tuple(lex.lemma_of(i) for i in s.lemma_ids) for s in subs}
+    assert ("who", "are", "you", "who") in seqs
+    assert ("who", "be", "you", "who") in seqs
+    assert all(s.qtype == QueryType.QT1 for s in subs)

@@ -1,0 +1,172 @@
+"""Cross-engine + oracle validation of the search algorithms.
+
+* Idx1 (ordinary inverted file) vs Idx2 (additional indexes) must return
+  the same matching-document sets for QT1 queries;
+* all Equalize modes (heap/basic/bulk) must return identical fragments;
+* every returned fragment must be valid per the brute-force oracle;
+* QT2-QT5 results must cover the oracle's matching docs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.lexicon import Lexicon
+from repro.core.search import InvertedIndexEngine, ProximitySearchEngine
+from repro.data.corpus import TokenTable, generate_corpus
+
+from oracle import fragment_is_valid, matching_docs
+
+D = 5
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    table, lex = generate_corpus(n_docs=60, mean_doc_len=60, vocab_size=400, seed=3)
+    lex.sw_count = 12
+    lex.fu_count = 25
+    idx_full = build_index(table, lex, max_distance=D)
+    idx_plain = build_index(table, lex, max_distance=D, build_wv=False, build_fst=False, build_nsw=False)
+    return table, lex, idx_full, idx_plain
+
+
+def _stop_queries(table, lex, n, rng):
+    out = []
+    stop_rows = np.nonzero(table.lemma_ids < lex.sw_count)[0]
+    while len(out) < n:
+        r = int(rng.choice(stop_rows))
+        d0, p0 = int(table.doc_ids[r]), int(table.positions[r])
+        m = (table.doc_ids == d0) & (np.abs(table.positions - p0) <= D)
+        lems = np.unique(table.lemma_ids[m & (table.lemma_ids < lex.sw_count)])
+        if lems.size >= 3:
+            k = int(rng.integers(3, min(5, lems.size) + 1))
+            out.append(sorted(rng.choice(lems, size=k, replace=False).tolist()))
+    return out
+
+
+def test_qt1_idx1_vs_proximity_docsets(small_world):
+    table, lex, idx_full, idx_plain = small_world
+    rng = np.random.default_rng(0)
+    baseline = InvertedIndexEngine(idx_plain, top_k=10_000)
+    prox = ProximitySearchEngine(idx_full, top_k=10_000, equalize_mode="heap")
+    for q in _stop_queries(table, lex, 12, rng):
+        r1, _ = baseline.search_ids(q)
+        r2, _ = prox.search_ids(q)
+        docs1 = set(r1.doc.tolist())
+        docs2 = set(r2.doc.tolist())
+        oracle = matching_docs(table, q, D)
+        assert docs1 == oracle, f"Idx1 doc set mismatch for {q}"
+        assert docs2 == oracle, f"fst doc set mismatch for {q}"
+
+
+def test_qt1_equalize_modes_identical(small_world):
+    table, lex, idx_full, _ = small_world
+    rng = np.random.default_rng(1)
+    engines = {
+        m: ProximitySearchEngine(idx_full, top_k=10_000, equalize_mode=m)
+        for m in ("heap", "basic", "bulk")
+    }
+    for q in _stop_queries(table, lex, 8, rng):
+        results = {}
+        for m, eng in engines.items():
+            r, _ = eng.search_ids(q)
+            results[m] = sorted(zip(r.doc.tolist(), r.start.tolist(), r.end.tolist()))
+        assert results["heap"] == results["basic"] == results["bulk"], q
+
+
+def test_qt1_fragments_valid(small_world):
+    table, lex, idx_full, _ = small_world
+    rng = np.random.default_rng(2)
+    prox = ProximitySearchEngine(idx_full, top_k=10_000)
+    for q in _stop_queries(table, lex, 8, rng):
+        r, _ = prox.search_ids(q)
+        for doc, s, e in zip(r.doc.tolist(), r.start.tolist(), r.end.tolist()):
+            assert fragment_is_valid(table, q, D, doc, s, e), (q, doc, s, e)
+
+
+def _typed_query(table, lex, rng, want):
+    """Sample a co-occurring query containing the wanted lemma classes."""
+    sw, fu = lex.sw_count, lex.fu_count
+    rows = np.arange(table.n_rows)
+    for _ in range(4000):
+        r = int(rng.choice(rows))
+        d0, p0 = int(table.doc_ids[r]), int(table.positions[r])
+        m = (table.doc_ids == d0) & (np.abs(table.positions - p0) <= D)
+        lems = np.unique(table.lemma_ids[m])
+        stop = lems[lems < sw]
+        freq = lems[(lems >= sw) & (lems < sw + fu)]
+        ordi = lems[lems >= sw + fu]
+        if want == "qt2" and freq.size >= 2:
+            return sorted(rng.choice(freq, 2, replace=False).tolist())
+        if want == "qt3" and ordi.size >= 2:
+            return sorted(rng.choice(ordi, 2, replace=False).tolist())
+        if want == "qt4" and freq.size >= 1 and ordi.size >= 1:
+            return sorted([int(rng.choice(freq)), int(rng.choice(ordi))])
+        if want == "qt5" and stop.size >= 1 and (freq.size + ordi.size) >= 2:
+            ns = np.concatenate([freq, ordi])
+            pick = rng.choice(ns, 2, replace=False).tolist() + [int(rng.choice(stop))]
+            return sorted(pick)
+    pytest.skip(f"could not sample a {want} query")
+
+
+@pytest.mark.parametrize("want", ["qt2", "qt3", "qt4", "qt5"])
+def test_other_query_types_match_oracle(small_world, want):
+    table, lex, idx_full, _ = small_world
+    rng = np.random.default_rng({"qt2": 21, "qt3": 22, "qt4": 23, "qt5": 24}[want])
+    prox = ProximitySearchEngine(idx_full, top_k=10_000)
+    for trial in range(4):
+        q = _typed_query(table, lex, rng, want)
+        r, _ = prox.search_ids(q)
+        got = set(r.doc.tolist())
+        anchor = None
+        if want == "qt5":
+            # QT5 anchors on the rarest non-stop lemma (stop lemmas are
+            # resolved from the anchor's NSW records — paper §1.2)
+            nonstop = [l for l in q if l >= lex.sw_count]
+            counts = {l: int((table.lemma_ids == l).sum()) for l in set(nonstop)}
+            anchor = min(sorted(set(nonstop)), key=lambda l: (counts[l], l))
+        oracle = matching_docs(table, q, D, anchor=anchor)
+        if want == "qt2":
+            # QT2 joins pair intervals within 2d of each other — a superset
+            # of the single-anchor oracle; oracle docs must all be found.
+            assert oracle <= got, (q, oracle - got)
+        else:
+            assert got == oracle, (q, want)
+
+
+def test_metrics_reduction_qt1(small_world):
+    """The paper's headline: additional indexes read far fewer postings."""
+    table, lex, idx_full, idx_plain = small_world
+    rng = np.random.default_rng(5)
+    baseline = InvertedIndexEngine(idx_plain, top_k=100)
+    prox = ProximitySearchEngine(idx_full, top_k=100)
+    tot1 = tot2 = 0
+    for q in _stop_queries(table, lex, 10, rng):
+        _, s1 = baseline.search_ids(q)
+        _, s2 = prox.search_ids(q)
+        tot1 += s1.postings
+        tot2 += s2.postings
+    assert tot2 < tot1, "additional indexes should process fewer postings"
+
+
+def test_full_text_pipeline():
+    """End-to-end Table 1 flow over a real-text corpus with lemmatization."""
+    from repro.core.lemmatizer import lemmatize_text
+
+    docs_text = [
+        "All was fresh around them familiar and yet new tinged with the beauty",
+        "Who are you who said the familiar voice in the new fresh morning",
+        "The beauty of the fresh morning was new to them all",
+        "You said you are the one who was around the familiar places",
+    ] * 3
+    lemmatized = [lemmatize_text(t) for t in docs_text]
+    lex = Lexicon.build(lemmatized, sw_count=8, fu_count=6)
+    docs_ids = [[[lex.fl(a) for a in alts] for alts in doc] for doc in lemmatized]
+    table = TokenTable.from_lemmatized(docs_ids)
+    idx = build_index(table, lex, max_distance=5)
+    eng = ProximitySearchEngine(idx, top_k=50)
+    res, stats = eng.search("who are you who")
+    assert res.size > 0
+    assert stats.bytes_read > 0
+    # top hit must be one of the docs actually containing the phrase words
+    assert int(res.doc[0]) % len(docs_text) in (1, 3)

@@ -1,0 +1,75 @@
+"""Serving runtime: bucketed search serving + LM continuous batching."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.index_builder import build_index
+from repro.core.search import ProximitySearchEngine
+from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import LMContinuousBatcher, SearchServingEngine
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=200, mean_doc_len=80, vocab_size=2000, seed=9)
+    lex.sw_count = 25
+    lex.fu_count = 50
+    idx = build_index(table, lex, max_distance=5)
+    return table, lex, idx
+
+
+def test_search_serving_matches_engine(world):
+    table, lex, idx = world
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024, 4096), max_batch=8, top_k=16)
+    queries = sample_stop_queries(table, lex, 12, window=3, seed=1)
+    for q in queries:
+        eng.submit(q)
+    responses = eng.drain()
+    assert len(responses) == len(queries)
+    ref = ProximitySearchEngine(idx, top_k=16, equalize_mode="bulk")
+    # responses come back in per-bucket batches; match by re-submitting one
+    eng2 = SearchServingEngine(idx, mesh, buckets=(256, 1024, 4096), max_batch=1, top_k=16)
+    for q in queries[:4]:
+        eng2.submit(q)
+        (resp,) = eng2.drain()
+        want, _ = ref.search_ids(q)
+        got = set(zip(resp.results["doc"].tolist(), resp.results["start"].tolist()))
+        expected = set(zip(want.doc.tolist()[:16], want.start.tolist()[:16]))
+        # top-k sets agree (scores are equal -> order may differ at the tail)
+        assert got <= set(zip(want.doc.tolist(), want.start.tolist()))
+        if expected:
+            assert got, f"no results for {q}"
+
+
+def test_search_serving_stats(world):
+    table, lex, idx = world
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 4096), max_batch=4, top_k=8)
+    queries = sample_stop_queries(table, lex, 10, window=3, seed=2)
+    for q in queries:
+        eng.submit(q)
+    eng.drain()
+    assert eng.stats["requests"] == 10
+    assert eng.stats["batches"] >= 3  # max_batch=4 forces several batches
+
+
+def test_lm_continuous_batching():
+    from repro.configs.registry import get_arch
+    from repro.models import transformer
+
+    cfg = get_arch("stablelm-1.6b").reduced().model_cfg
+    params = transformer.init_params(cfg, jax.random.key(0))
+    batcher = LMContinuousBatcher(cfg, params, batch_slots=4, max_len=24, eos_id=-1)
+    rids = [batcher.submit([1, 2, 3]) for _ in range(6)]  # 6 requests, 4 slots
+    finished = {}
+    for _ in range(80):
+        finished.update(batcher.step())
+        if len(finished) == 6:
+            break
+    assert len(finished) == 6, f"only {len(finished)} finished"
+    for rid in rids:
+        assert rid in finished
+        assert 1 <= len(finished[rid]) <= 24

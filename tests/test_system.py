@@ -1,0 +1,83 @@
+"""End-to-end system behaviour tests: the full paper pipeline on both the
+reference engine and the device engine, plus the experiment harness."""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.search import InvertedIndexEngine, ProximitySearchEngine
+from repro.data.corpus import generate_corpus, sample_stop_queries
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=300, mean_doc_len=100, vocab_size=5000, seed=42)
+    return table, lex
+
+
+def test_end_to_end_maxdistance_dependence(world):
+    """Paper §3.2: postings/bytes per query grow with MaxDistance but stay
+    orders of magnitude below the inverted-file baseline."""
+    table, lex = world
+    queries = sample_stop_queries(table, lex, 30, window=3, seed=0)
+
+    idx1 = build_index(table, lex, 5, build_wv=False, build_fst=False, build_nsw=False)
+    base = InvertedIndexEngine(idx1, top_k=50)
+    base_postings = base_bytes = 0
+    for q in queries:
+        _, s = base.search_ids(q)
+        base_postings += s.postings
+        base_bytes += s.bytes_read
+
+    prev_bytes = 0
+    for d in (5, 7, 9):
+        idx = build_index(table, lex, d)
+        eng = ProximitySearchEngine(idx, top_k=50)
+        tot_p = tot_b = 0
+        for q in queries:
+            _, s = eng.search_ids(q)
+            tot_p += s.postings
+            tot_b += s.bytes_read
+        assert tot_p < base_postings / 3, f"d={d}: postings not reduced enough"
+        assert tot_b < base_bytes / 3, f"d={d}: bytes not reduced enough"
+        assert tot_b >= prev_bytes, "data read should grow with MaxDistance"
+        prev_bytes = tot_b
+
+
+def test_results_consistent_across_maxdistance(world):
+    """d=9 widens the proximity window: strictly more permissive than d=5."""
+    table, lex = world
+    queries = sample_stop_queries(table, lex, 10, window=2, seed=3)
+    engines = {d: ProximitySearchEngine(build_index(table, lex, d), top_k=10_000)
+               for d in (5, 9)}
+    for q in queries:
+        docs = {}
+        for d, eng in engines.items():
+            r, _ = eng.search_ids(q)
+            docs[d] = set(r.doc.tolist())
+        assert docs[5] <= docs[9], q
+
+
+def test_experiment_harness_smoke():
+    from benchmarks import paper_experiments
+
+    rep = paper_experiments.run(n_docs=150, mean_doc_len=80, n_queries=12,
+                                out_json=None)
+    assert set(rep["indexes"]) == {"Idx1", "Idx2", "Idx3", "Idx4"}
+    for label in ("Idx2", "Idx3", "Idx4"):
+        assert rep["indexes"][label]["postings_reduction_vs_idx1"] > 1.0
+
+
+def test_dryrun_single_cell_small_mesh():
+    """run_cell machinery end to end on an in-process mesh."""
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_step
+
+    arch = get_arch("proximity-search")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    built = build_step(arch, "qt1_p99", mesh)
+    compiled = built.lower().compile()
+    assert compiled.cost_analysis() is not None
+    ma = compiled.memory_analysis()
+    assert ma.argument_size_in_bytes > 0
