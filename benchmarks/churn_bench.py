@@ -1,0 +1,185 @@
+"""Indexing throughput and query latency under add/delete/merge churn.
+
+The paper's guarantee is defined over a static index; this bench measures
+what the segmented subsystem (repro.index) preserves of it while the
+corpus mutates: a writer streams document adds + tombstone deletes through
+``SegmentedIndex`` (memtable seals and size-tiered merges run inline),
+while queries are answered from immutable snapshots — optionally from a
+concurrent reader thread, which is safe precisely because snapshots are
+immutable.
+
+Reported: indexing docs/sec (including seal+merge time), refresh latency,
+and QT1 query latency p50/p95 sampled *during* churn, for both the CPU
+``ProximitySearchEngine`` and (with --serve) the bucketed compiled JAX
+serve path behind the refresh() protocol.
+
+Run directly (``python benchmarks/churn_bench.py``) or via
+``benchmarks/run.py --only churn``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.core.search import ProximitySearchEngine
+from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.index import SegmentedIndex
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+
+
+def run(
+    n_docs: int = 1200,
+    mean_doc_len: int = 120,
+    vocab_size: int = 8000,
+    chunk: int = 60,
+    delete_frac: float = 0.15,
+    queries_per_round: int = 12,
+    memtable_docs: int = 48,
+    tier_fanout: int = 4,
+    threads: bool = False,
+    serve: bool = False,
+    seed: int = 3,
+):
+    table, lex = generate_corpus(
+        n_docs=n_docs, mean_doc_len=mean_doc_len, vocab_size=vocab_size, seed=seed
+    )
+    docs = table.to_doc_lists()
+    queries = sample_stop_queries(table, lex, 64, window=3, seed=seed + 1)
+    rng = np.random.default_rng(seed + 2)
+
+    seg = SegmentedIndex(
+        lex, max_distance=5, memtable_docs=memtable_docs, tier_fanout=tier_fanout
+    )
+    q_lat: list[float] = []
+    refresh_lat: list[float] = []
+    stop_flag = {"stop": False}
+
+    def query_round(view, n):
+        eng = ProximitySearchEngine(view, top_k=16)
+        for _ in range(n):
+            q = queries[int(rng.integers(0, len(queries)))]
+            t0 = time.perf_counter()
+            eng.search_ids(q)
+            q_lat.append(time.perf_counter() - t0)
+
+    reader = None
+    if threads:
+
+        def loop():
+            while not stop_flag["stop"]:
+                query_round(seg.snapshot(), 4)
+
+        reader = threading.Thread(target=loop, daemon=True)
+
+    serve_lat: list[float] = []
+    serve_engine = None
+    if serve:
+        from repro.launch.mesh import make_mesh
+        from repro.serving.engine import SearchServingEngine
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        serve_engine = SearchServingEngine(
+            seg, mesh, buckets=(1024, 4096, 16384), max_batch=16, top_k=16
+        )
+
+    alive: list[int] = []
+    t_index = 0.0
+    t_start = time.perf_counter()
+    first = True
+    for lo in range(0, len(docs), chunk):
+        t0 = time.perf_counter()
+        for d in docs[lo : lo + chunk]:
+            alive.append(seg.add_document(d))
+        n_del = int(len(alive) * delete_frac * chunk / max(len(docs), 1))
+        for _ in range(min(n_del, max(len(alive) - 8, 0))):
+            victim = alive.pop(int(rng.integers(0, len(alive))))
+            seg.delete_document(victim)
+        tr0 = time.perf_counter()
+        view = seg.refresh()
+        refresh_lat.append(time.perf_counter() - tr0)
+        t_index += time.perf_counter() - t0
+        if first and reader is not None:
+            reader.start()
+            first = False
+        if not threads:
+            query_round(view, queries_per_round)
+        if serve_engine is not None:
+            serve_engine.refresh()
+            for _ in range(4):
+                serve_engine.submit(queries[int(rng.integers(0, len(queries)))])
+            ts = time.perf_counter()
+            serve_engine.drain()
+            serve_lat.append((time.perf_counter() - ts) / 4)
+    stop_flag["stop"] = True
+    if reader is not None:
+        reader.join(timeout=10)
+    wall = time.perf_counter() - t_start
+
+    rep = {
+        "docs_indexed": len(docs),
+        "docs_deleted": seg.stats["docs_deleted"],
+        "seals": seg.stats["seals"],
+        "merges": seg.stats["merges"],
+        "final_segments": seg.n_segments,
+        "docs_per_s": len(docs) / t_index,
+        "wall_s": wall,
+        "refresh_p50_ms": _pct(refresh_lat, 50) * 1e3,
+        "refresh_p95_ms": _pct(refresh_lat, 95) * 1e3,
+        "query_p50_ms": _pct(q_lat, 50) * 1e3,
+        "query_p95_ms": _pct(q_lat, 95) * 1e3,
+        "queries_during_churn": len(q_lat),
+    }
+    if serve_lat:
+        rep["serve_p50_ms"] = _pct(serve_lat, 50) * 1e3
+        rep["serve_p95_ms"] = _pct(serve_lat, 95) * 1e3
+    return rep
+
+
+def rows(rep: dict) -> list[tuple]:
+    derived = ";".join(
+        f"{k}={rep[k]:.2f}" if isinstance(rep[k], float) else f"{k}={rep[k]}"
+        for k in sorted(rep)
+        if k not in ("query_p50_ms",)
+    )
+    return [("churn/qt1_under_churn", rep["query_p50_ms"] * 1e3, derived)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--docs", type=int, default=1200)
+    ap.add_argument("--doc-len", type=int, default=120)
+    ap.add_argument("--vocab", type=int, default=8000)
+    ap.add_argument("--chunk", type=int, default=60)
+    ap.add_argument("--delete-frac", type=float, default=0.15)
+    ap.add_argument("--memtable-docs", type=int, default=48)
+    ap.add_argument("--tier-fanout", type=int, default=4)
+    ap.add_argument("--threads", action="store_true",
+                    help="query from a concurrent reader thread")
+    ap.add_argument("--serve", action="store_true",
+                    help="also drive the compiled JAX serve path")
+    args = ap.parse_args()
+    rep = run(
+        n_docs=args.docs,
+        mean_doc_len=args.doc_len,
+        vocab_size=args.vocab,
+        chunk=args.chunk,
+        delete_frac=args.delete_frac,
+        memtable_docs=args.memtable_docs,
+        tier_fanout=args.tier_fanout,
+        threads=args.threads,
+        serve=args.serve,
+    )
+    for k in sorted(rep):
+        v = rep[k]
+        print(f"{k}: {v:.3f}" if isinstance(v, float) else f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

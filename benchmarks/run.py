@@ -5,7 +5,9 @@ Sections:
   search/*    — the paper's Idx1 vs Idx2/3/4 experiment (Figs. 6-9);
   equalize/*  — §2.3 heap vs basic Equalize scaling;
   kernel/*    — posting-intersection / proximity / embedding-bag ops;
-  serve/*     — compiled QT1 serve-step latency per bucket.
+  serve/*     — compiled QT1 serve-step latency per bucket;
+  churn/*     — segmented-index throughput + latency under add/delete/
+                merge churn (repro.index).
 
 Quick mode (default) uses a reduced corpus; --full matches the corpus
 scale used in EXPERIMENTS.md.
@@ -52,6 +54,15 @@ def main() -> None:
         from benchmarks import serve_bench
 
         rows += serve_bench.run()
+
+    if want("churn"):
+        from benchmarks import churn_bench
+
+        if args.full:
+            rep = churn_bench.run()
+        else:
+            rep = churn_bench.run(n_docs=400, chunk=40)
+        rows += churn_bench.rows(rep)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -70,6 +70,21 @@ class NSWStreams:
             meter.add(len(blob), 0)
         return decode_nsw_stream(blob, se[1] - se[0])
 
+    def records(self, lemma: int):
+        """Unencoded (rows, fls, offs) for one lemma, normalized to the
+        decode order (row, fl, off) — the cheap path for segment merges."""
+        se = self.lemma_row_start.get(lemma)
+        if se is None:
+            return (np.zeros(0, np.int64),) * 3
+        s, e = se
+        lo = np.searchsorted(self.neighbor_rows, s, side="left")
+        hi = np.searchsorted(self.neighbor_rows, e, side="left")
+        rows = self.neighbor_rows[lo:hi] - s
+        fls = self.neighbor_fls[lo:hi]
+        offs = self.neighbor_offs[lo:hi]
+        order = np.lexsort((offs, fls, rows))
+        return rows[order].astype(np.int64), fls[order].astype(np.int64), offs[order].astype(np.int64)
+
 
 @dataclass
 class ProximityIndex:
@@ -154,6 +169,38 @@ def build_index(
     build_fst: bool = True,
     build_nsw: bool = True,
 ) -> ProximityIndex:
+    """Single-shot build == one sealed segment of the incremental path.
+
+    The numeric construction lives in :func:`build_segment_index`; this
+    canonical entry point routes through ``repro.index.MemSegment`` so the
+    static build and the segmented/LSM build (repro.index) share one code
+    path and cannot drift apart."""
+    from repro.index.segment import MemSegment
+
+    mem = MemSegment(
+        lexicon,
+        max_distance=max_distance,
+        build_wv=build_wv,
+        build_fst=build_fst,
+        build_nsw=build_nsw,
+    )
+    mem.add_table(table)
+    seg = mem.seal(segment_id=0)
+    if seg is None:  # empty corpus: degenerate empty index
+        return build_segment_index(table, lexicon, max_distance, build_wv, build_fst, build_nsw)
+    return seg.index
+
+
+def build_segment_index(
+    table: TokenTable,
+    lexicon: Lexicon,
+    max_distance: int = 5,
+    build_wv: bool = True,
+    build_fst: bool = True,
+    build_nsw: bool = True,
+) -> ProximityIndex:
+    """Build all four paper index structures for one corpus slice (a
+    segment). Doc ids in `table` are segment-local."""
     t = table.sorted_copy()  # (doc, pos, lemma)
     sw = lexicon.sw_count
     fu_hi = lexicon.sw_count + lexicon.fu_count

@@ -32,6 +32,8 @@ from repro.core.index_builder import ProximityIndex
 from repro.core.query import select_fst_keys
 from repro.kernels.common import SENTINEL
 
+from repro.kernels.common import shard_map_compat as _shard_map
+
 NEG_INF = jnp.float32(-1e30)
 
 
@@ -103,19 +105,14 @@ def make_qt1_serve_step(mesh, top_k: int = 16, use_pallas: bool = False):
         h_all = jax.lax.all_gather(h, "model", axis=1, tiled=True)
         return qt1_topk(s_all, g_all, l_all, h_all, top_k)
 
-    from jax import shard_map
-
     batch_spec = P(batch_axes, None, "model")
     vec_spec = P(batch_axes)
     out_spec = P(batch_axes, None)
-    step = shard_map(
+    step = _shard_map(
         local_step,
-        mesh=mesh,
+        mesh,
         in_specs=(batch_spec, batch_spec, batch_spec, vec_spec, vec_spec),
         out_specs=(out_spec, out_spec, out_spec, out_spec),
-        # outputs are replicated along `model` by the all_gather; the static
-        # varying-mesh-axes checker cannot see through top_k, so disable it
-        check_vma=False,
     )
     in_shardings = (
         NamedSharding(mesh, batch_spec),
@@ -166,19 +163,16 @@ def make_qt1_serve_step_compressed(mesh, top_k: int = 16, delta_g: bool = True):
         h_all = jax.lax.all_gather(h, "model", axis=1, tiled=True)
         return qt1_topk(s_all, g_all, l_all, h_all, top_k)
 
-    from jax import shard_map
-
     batch_spec = P(batch_axes, None, "model")
     # offsets-only: the dummy (B,K,1) base cannot shard its unit dim
     base_spec = batch_spec if delta_g else P(batch_axes, None, None)
     vec_spec = P(batch_axes)
     out_spec = P(batch_axes, None)
-    step = shard_map(
+    step = _shard_map(
         local_step,
-        mesh=mesh,
+        mesh,
         in_specs=(base_spec, batch_spec, batch_spec, batch_spec, vec_spec, vec_spec),
         out_specs=(out_spec,) * 4,
-        check_vma=False,
     )
     shards = lambda spec: NamedSharding(mesh, spec)
     return jax.jit(

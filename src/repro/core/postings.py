@@ -140,6 +140,15 @@ class PostingStore:
             meter.add(len(blob), self.counts.get(key, 0))
         return decode_postings(blob, self.n_columns)
 
+    def columns(self, key) -> list[np.ndarray]:
+        """Unmetered decoded columns, skipping the codec round-trip when the
+        raw columns are still in memory (segment merges, not query serving:
+        queries go through `read` so the ByteMeter sees every byte)."""
+        cols = self._raw.get(key)
+        if cols is not None:
+            return [np.asarray(c).astype(np.int64) for c in cols]
+        return decode_postings(self._blob(key), self.n_columns)
+
     def total_bytes(self) -> int:
         # force-encode everything (used by index-size reports, not queries)
         return sum(len(self._blob(k)) for k in self.counts)

@@ -43,6 +43,15 @@ class TokenTable:
             self.doc_ids[order], self.positions[order], self.lemma_ids[order], self.doc_lengths
         )
 
+    def to_doc_lists(self) -> list[list[int]]:
+        """Per-document lemma-id lists in position order — the shape
+        ``SegmentedIndex.add_document`` consumes. Single-lemma corpora
+        only (multi-lemma positions would need the alternatives shape)."""
+        order = np.lexsort((self.positions, self.doc_ids))
+        docs, toks = self.doc_ids[order], self.lemma_ids[order]
+        splits = np.searchsorted(docs, np.arange(1, self.n_docs))
+        return [d.tolist() for d in np.split(toks, splits)]
+
     @classmethod
     def from_docs(cls, docs: list[np.ndarray]) -> "TokenTable":
         """docs: list of int lemma-id arrays (single lemma per position)."""

@@ -1,0 +1,21 @@
+"""Segmented incremental indexing (LSM-style) for the paper's composite
+index: memtable absorption, immutable sealed segments with on-disk
+persistence, tombstone deletes, size-tiered background compaction, and a
+``ProximityIndex``-compatible merged read facade for live-refresh serving.
+"""
+
+from repro.index.compaction import merge_segments, size_tiered_plan
+from repro.index.persist import load_index, save_index
+from repro.index.segment import MemSegment, Segment
+from repro.index.segmented import SegmentedIndex, SegmentedView
+
+__all__ = [
+    "MemSegment",
+    "Segment",
+    "SegmentedIndex",
+    "SegmentedView",
+    "merge_segments",
+    "size_tiered_plan",
+    "save_index",
+    "load_index",
+]

@@ -1,0 +1,138 @@
+"""On-disk (de)serialization for sealed index structures.
+
+Extends the persistence that previously existed only for ``Lexicon`` to
+the full ``ProximityIndex``: every ``PostingStore`` is written as its
+*encoded* blobs (one concatenated byte stream + offsets + keys + counts),
+so save/load round-trips the exact on-disk representation the ByteMeter
+accounts for, and loading does no re-encoding work.
+
+Layout: a flat dict of numpy arrays (npz-friendly) with a ``kind_``
+prefix per structure, plus a small JSON meta carried by the caller
+(``Segment.save`` / ``save_index``).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.index_builder import NSWStreams, ProximityIndex
+from repro.core.lexicon import Lexicon
+from repro.core.postings import PostingStore
+
+_KDIM = {"ordinary": 1, "wv": 2, "fst": 3}
+_NCOL = {"ordinary": 2, "wv": 3, "fst": 4}
+
+
+def store_to_arrays(store: PostingStore, kind: str) -> dict[str, np.ndarray]:
+    """Force-encode a PostingStore and flatten it into arrays."""
+    keys = sorted(store.counts)
+    kdim = _KDIM[kind]
+    if kdim == 1:
+        keys_arr = np.array([[k] for k in keys], np.int64).reshape(len(keys), 1)
+    else:
+        keys_arr = np.array([list(k) for k in keys], np.int64).reshape(len(keys), kdim)
+    blobs = [store._blob(k) for k in keys]
+    lens = np.array([len(b) for b in blobs], np.int64)
+    offsets = np.zeros(len(keys) + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    blob = np.frombuffer(b"".join(blobs), np.uint8)
+    counts = np.array([store.counts[k] for k in keys], np.int64)
+    return {
+        f"{kind}_keys": keys_arr,
+        f"{kind}_counts": counts,
+        f"{kind}_offsets": offsets,
+        f"{kind}_blob": blob,
+    }
+
+
+def store_from_arrays(arrays: dict, kind: str) -> PostingStore:
+    keys_arr = arrays[f"{kind}_keys"]
+    counts_arr = arrays[f"{kind}_counts"]
+    offsets = arrays[f"{kind}_offsets"]
+    blob = arrays[f"{kind}_blob"].tobytes()
+    kdim = _KDIM[kind]
+    store = PostingStore(n_columns=_NCOL[kind])
+    for i in range(keys_arr.shape[0]):
+        key = int(keys_arr[i, 0]) if kdim == 1 else tuple(int(x) for x in keys_arr[i])
+        store.blobs[key] = blob[int(offsets[i]) : int(offsets[i + 1])]
+        store.counts[key] = int(counts_arr[i])
+    return store
+
+
+def nsw_to_arrays(nsw: NSWStreams) -> dict[str, np.ndarray]:
+    lemmas = sorted(nsw.lemma_row_start)
+    spans = np.array(
+        [[l, *nsw.lemma_row_start[l]] for l in lemmas], np.int64
+    ).reshape(len(lemmas), 3)
+    return {
+        "nsw_rows": nsw.neighbor_rows.astype(np.int64),
+        "nsw_fls": nsw.neighbor_fls.astype(np.int64),
+        "nsw_offs": nsw.neighbor_offs.astype(np.int64),
+        "nsw_spans": spans,
+    }
+
+
+def nsw_from_arrays(arrays: dict) -> NSWStreams:
+    spans = arrays["nsw_spans"]
+    lemma_row_start = {
+        int(spans[i, 0]): (int(spans[i, 1]), int(spans[i, 2]))
+        for i in range(spans.shape[0])
+    }
+    return NSWStreams(
+        arrays["nsw_rows"].astype(np.int64),
+        arrays["nsw_fls"].astype(np.int64),
+        arrays["nsw_offs"].astype(np.int64),
+        lemma_row_start,
+    )
+
+
+def index_to_arrays(index: ProximityIndex) -> dict[str, np.ndarray]:
+    arrays = store_to_arrays(index.ordinary, "ordinary")
+    if index.wv is not None:
+        arrays.update(store_to_arrays(index.wv, "wv"))
+    if index.fst is not None:
+        arrays.update(store_to_arrays(index.fst, "fst"))
+    if index.nsw is not None:
+        arrays.update(nsw_to_arrays(index.nsw))
+    if index.doc_lengths is not None:
+        arrays["doc_lengths"] = np.asarray(index.doc_lengths, np.int64)
+    return arrays
+
+
+def index_from_arrays(arrays: dict, lexicon: Lexicon, meta: dict) -> ProximityIndex:
+    return ProximityIndex(
+        lexicon=lexicon,
+        max_distance=int(meta["max_distance"]),
+        ordinary=store_from_arrays(arrays, "ordinary"),
+        nsw=nsw_from_arrays(arrays) if meta.get("has_nsw") else None,
+        wv=store_from_arrays(arrays, "wv") if meta.get("has_wv") else None,
+        fst=store_from_arrays(arrays, "fst") if meta.get("has_fst") else None,
+        doc_lengths=arrays.get("doc_lengths"),
+    )
+
+
+def save_index(index: ProximityIndex, path: str | Path) -> None:
+    """Persist a plain (single-shot) ProximityIndex, lexicon included."""
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    index.lexicon.save(path / "lexicon.json")
+    meta = {
+        "max_distance": index.max_distance,
+        "has_wv": index.wv is not None,
+        "has_fst": index.fst is not None,
+        "has_nsw": index.nsw is not None,
+    }
+    (path / "meta.json").write_text(json.dumps(meta))
+    np.savez(path / "index.npz", **index_to_arrays(index))
+
+
+def load_index(path: str | Path) -> ProximityIndex:
+    path = Path(path)
+    lexicon = Lexicon.load(path / "lexicon.json")
+    meta = json.loads((path / "meta.json").read_text())
+    with np.load(path / "index.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    return index_from_arrays(arrays, lexicon, meta)

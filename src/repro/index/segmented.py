@@ -1,0 +1,475 @@
+"""Segmented, incrementally-updatable composite index.
+
+``SegmentedIndex`` is the mutable manager: documents stream into a
+``MemSegment`` memtable, ``refresh()`` seals it into an immutable
+``Segment`` and publishes a new ``SegmentedView`` snapshot; deletes are
+tombstones applied at read/merge time; size-tiered compaction keeps the
+segment count bounded.
+
+``SegmentedView`` implements the exact read API of
+``core.index_builder.ProximityIndex`` (``read_ordinary`` / ``read_wv`` /
+``read_fst`` / ``nsw.read`` / ``size_report`` plus the ``ordinary`` /
+``wv`` / ``fst`` store attributes, ``lexicon``, ``max_distance``,
+``doc_lengths``), so ``InvertedIndexEngine``, ``ProximitySearchEngine``
+and the bucketed JAX serving path (``pack_qt1_batch`` /
+``make_qt1_serve_step``) all run unchanged over a mutating corpus.
+
+Visibility contract (Lucene-NRT style): reads go through the snapshot
+current at engine construction; adds/deletes become visible only after
+``refresh()``. Snapshots are immutable, so in-flight batches on an old
+snapshot stay consistent while merges run. Doc ids seen by engines are
+*global* ids (stable across compactions; deleted ids leave holes).
+
+The FL-list (``Lexicon``) is fixed for the lifetime of the index, as in
+the paper: lemma ids are frequency ranks of the reference corpus, and
+re-ranking would invalidate every sealed segment.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from collections import OrderedDict
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.codecs import zigzag_decode
+from repro.core.lexicon import Lexicon
+from repro.core.postings import ByteMeter
+from repro.data.corpus import TokenTable
+from repro.index.compaction import merge_segments, size_tiered_plan
+from repro.index.merge import isin_sorted, merged_key_read, merged_nsw_read
+from repro.index.segment import MemSegment, Segment
+
+_CACHE_CAP = 4096  # merged-read entries per snapshot
+
+
+class _MergedStore:
+    """PostingStore-shaped facade over the per-segment stores: metered
+    ``read``, ``__contains__``, ``n_postings``, ``keys``, backed by the
+    snapshot's merged-read cache."""
+
+    def __init__(self, view: "SegmentedView", kind: str):
+        self._view = view
+        self._kind = kind
+
+    def __contains__(self, key) -> bool:
+        return any(
+            key in getattr(seg.index, self._kind) for seg in self._view.segments
+        )
+
+    def keys(self):
+        out = set()
+        for seg in self._view.segments:
+            out.update(getattr(seg.index, self._kind).keys())
+        return out
+
+    def n_postings(self, key) -> int:
+        """Exact *live* posting count (tombstones applied) — anchor choice
+        and bucket sizing match a fresh rebuild."""
+        if key not in self:
+            return 0
+        cols, _, _, _ = self._view._merged(self._kind, key)
+        return int(cols[0].size)
+
+    def read(self, key, meter: ByteMeter | None = None) -> list[np.ndarray]:
+        cols, _, _, nbytes = self._view._merged(self._kind, key)
+        if meter is not None:
+            meter.add(nbytes, cols[0].size)
+        return cols
+
+    def total_bytes(self) -> int:
+        return sum(
+            getattr(seg.index, self._kind).total_bytes() for seg in self._view.segments
+        )
+
+
+class _MergedNSW:
+    """NSWStreams-shaped facade: per-lemma record streams renumbered to
+    align with the merged ordinary posting list of that lemma."""
+
+    def __init__(self, view: "SegmentedView"):
+        self._view = view
+
+    def read(self, lemma: int, meter: ByteMeter | None = None):
+        rows, fls, offs, nbytes = self._view._merged_nsw(lemma)
+        if meter is not None:
+            meter.add(nbytes, 0)
+        return rows, fls, offs
+
+    def total_bytes(self) -> int:
+        return sum(
+            seg.index.nsw.blob(l).__len__()
+            for seg in self._view.segments
+            if seg.index.nsw is not None
+            for l in seg.index.nsw.lemma_row_start
+        )
+
+
+class SegmentedView:
+    """Immutable searcher snapshot over a set of sealed segments."""
+
+    def __init__(
+        self,
+        segments: tuple[Segment, ...],
+        tombstones: np.ndarray,
+        lexicon: Lexicon,
+        max_distance: int,
+        n_total_docs: int,
+    ):
+        self.segments = tuple(segments)
+        self.tombstones = np.sort(np.asarray(tombstones, np.int64))
+        self.lexicon = lexicon
+        self.max_distance = max_distance
+        self.n_total_docs = int(n_total_docs)
+        # global doc-length table (holes for deleted/compacted-away docs
+        # keep their slot: engines only use it to size the doc stride)
+        dl = np.zeros(max(self.n_total_docs, 1), np.int64)
+        for seg in self.segments:
+            dl[seg.doc_map] = np.asarray(seg.index.doc_lengths, np.int64)
+        self.doc_lengths = dl
+        has = lambda kind: any(  # noqa: E731
+            getattr(s.index, kind) is not None for s in self.segments
+        )
+        self.ordinary = _MergedStore(self, "ordinary")
+        self.wv = _MergedStore(self, "wv") if has("wv") else None
+        self.fst = _MergedStore(self, "fst") if has("fst") else None
+        self.nsw = _MergedNSW(self) if has("nsw") else None
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_lock = threading.Lock()  # snapshots are shared across
+        # serving threads; merged entries are immutable so only the
+        # OrderedDict bookkeeping needs guarding
+
+    # -- merged reads (cached per snapshot) --------------------------------
+    def _cache_put(self, ck, value):
+        with self._cache_lock:
+            if len(self._cache) >= _CACHE_CAP:
+                self._cache.popitem(last=False)
+            self._cache[ck] = value
+
+    def _merged(self, kind: str, key):
+        with self._cache_lock:
+            hit = self._cache.get((kind, key))
+        if hit is None:
+            hit = merged_key_read(self.segments, kind, key, self.tombstones)
+            self._cache_put((kind, key), hit)
+        return hit
+
+    def _merged_nsw(self, lemma: int):
+        with self._cache_lock:
+            hit = self._cache.get(("nsw", lemma))
+        if hit is None:
+            _, seg_ids, old_rows, _ = self._merged("ordinary", lemma)
+            hit = merged_nsw_read(self.segments, lemma, seg_ids, old_rows)
+            self._cache_put(("nsw", lemma), hit)
+        return hit
+
+    # -- ProximityIndex read API -------------------------------------------
+    @property
+    def has_additional(self) -> bool:
+        return self.fst is not None
+
+    def read_ordinary(self, lemma: int, meter: ByteMeter | None = None):
+        cols = self.ordinary.read(lemma, meter)
+        return cols[0], cols[1]
+
+    def read_wv(self, key, meter: ByteMeter | None = None):
+        cols = self.wv.read(key, meter)
+        return cols[0], cols[1], zigzag_decode(cols[2].astype(np.uint64))
+
+    def read_fst(self, key, meter: ByteMeter | None = None):
+        cols = self.fst.read(key, meter)
+        return (
+            cols[0],
+            cols[1],
+            zigzag_decode(cols[2].astype(np.uint64)),
+            zigzag_decode(cols[3].astype(np.uint64)),
+        )
+
+    def live_doc_ids(self) -> np.ndarray:
+        """Sorted global ids of all non-deleted documents."""
+        if not self.segments:
+            return np.zeros(0, np.int64)
+        parts = [
+            seg.doc_map[~isin_sorted(self.tombstones, seg.doc_map)]
+            for seg in self.segments
+        ]
+        return np.sort(np.concatenate(parts))
+
+    def size_report(self) -> dict:
+        rep = {
+            "n_segments": len(self.segments),
+            "live_docs": int(self.live_doc_ids().size),
+            "tombstones": int(self.tombstones.size),
+            "ordinary_bytes": sum(s.index.ordinary.total_bytes() for s in self.segments),
+        }
+        if self.wv is not None:
+            rep["wv_bytes"] = sum(
+                s.index.wv.total_bytes() for s in self.segments if s.index.wv is not None
+            )
+            rep["wv_keys"] = len(self.wv.keys())
+        if self.fst is not None:
+            rep["fst_bytes"] = sum(
+                s.index.fst.total_bytes() for s in self.segments if s.index.fst is not None
+            )
+            rep["fst_keys"] = len(self.fst.keys())
+        return rep
+
+
+class SegmentedIndex:
+    """Mutable LSM-style index manager with an immutable-snapshot read path.
+
+    Typical serving loop::
+
+        idx = SegmentedIndex(lexicon)
+        idx.add_document([...]); idx.delete_document(gid)
+        idx.refresh()                    # seal + maybe compact + publish
+        engine = ProximitySearchEngine(idx.snapshot())
+    """
+
+    def __init__(
+        self,
+        lexicon: Lexicon,
+        max_distance: int = 5,
+        build_wv: bool = True,
+        build_fst: bool = True,
+        build_nsw: bool = True,
+        memtable_docs: int = 512,
+        tier_fanout: int = 4,
+    ):
+        if tier_fanout < 2:
+            raise ValueError("tier_fanout must be >= 2")
+        if memtable_docs < 1:
+            raise ValueError("memtable_docs must be >= 1")
+        self.lexicon = lexicon
+        self.max_distance = max_distance
+        self._flags = dict(build_wv=build_wv, build_fst=build_fst, build_nsw=build_nsw)
+        self.memtable_docs = memtable_docs
+        self.tier_fanout = tier_fanout
+        self._segments: list[Segment] = []
+        self._tombstones: set[int] = set()
+        self._next_doc = 0
+        self._next_seg = 0
+        self._mem = self._new_mem()
+        self._snapshot: SegmentedView | None = None
+        self.stats = {"seals": 0, "merges": 0, "docs_added": 0, "docs_deleted": 0}
+
+    def _new_mem(self) -> MemSegment:
+        return MemSegment(self.lexicon, max_distance=self.max_distance, **self._flags)
+
+    # -- mutation ----------------------------------------------------------
+    def add_document(self, tokens) -> int:
+        """Absorb one document; returns its global doc id. The doc becomes
+        searchable after the next refresh()."""
+        gid = self._next_doc
+        self._next_doc += 1
+        self._mem.add_document(gid, tokens)
+        self.stats["docs_added"] += 1
+        if self._mem.n_docs >= self.memtable_docs:
+            self._seal()
+        return gid
+
+    def add_table(self, table: TokenTable) -> np.ndarray:
+        """Bulk-load a TokenTable; returns the assigned global doc ids."""
+        gids = np.arange(self._next_doc, self._next_doc + table.n_docs, dtype=np.int64)
+        self._mem.add_table(table, gids)
+        self._next_doc += table.n_docs
+        self.stats["docs_added"] += table.n_docs
+        if self._mem.n_docs >= self.memtable_docs:
+            self._seal()
+        return gids
+
+    def delete_document(self, global_id: int) -> None:
+        """Tombstone a document (visible after the next refresh()). The id
+        is never reused; an update is delete + re-add under a fresh id.
+        Idempotent: re-deleting an already-deleted doc (even one whose
+        tombstone was purged by compaction) is a no-op — a tombstone no
+        segment covers could never be purged again."""
+        global_id = int(global_id)
+        if not 0 <= global_id < self._next_doc:
+            raise KeyError(f"unknown doc id {global_id}")
+        if global_id in self._tombstones:
+            return
+        covered = global_id in self._mem._global_ids or any(
+            bool(isin_sorted(seg.doc_map, np.array([global_id])))
+            for seg in self._segments
+        )
+        if not covered:  # already deleted and physically compacted away
+            return
+        self._tombstones.add(global_id)
+        self.stats["docs_deleted"] += 1
+
+    # -- seal / compact ----------------------------------------------------
+    def _seal(self) -> None:
+        seg = self._mem.seal(segment_id=self._next_seg)
+        if seg is not None:
+            self._next_seg += 1
+            self._segments.append(seg)
+            self.stats["seals"] += 1
+            self._mem = self._new_mem()
+            self.maybe_compact()
+
+    def maybe_compact(self) -> int:
+        """Run the size-tiered policy until stable; returns merge count."""
+        merges = 0
+        while True:
+            plan = size_tiered_plan(self._segments, self.tier_fanout)
+            if not plan:
+                return merges
+            # merge one group per pass: indices into self._segments go
+            # stale the moment _merge_group mutates the list, so replan
+            self._merge_group(plan[0])
+            merges += 1
+
+    def compact(self, force: bool = False) -> int:
+        """force=True merges *all* segments into one (major compaction);
+        otherwise runs the size-tiered policy."""
+        if not force:
+            return self.maybe_compact()
+        if len(self._segments) <= 1 and not (
+            self._segments and self._covered_tombstones(self._segments)
+        ):
+            return 0
+        self._merge_group(list(range(len(self._segments))))
+        return 1
+
+    def _covered_tombstones(self, segs: list[Segment]) -> set[int]:
+        covered = set()
+        for seg in segs:
+            covered.update(int(g) for g in seg.doc_map)
+        return covered & self._tombstones
+
+    def _merge_group(self, group: list[int]) -> None:
+        group_set = set(group)
+        victims = [self._segments[i] for i in group]
+        tomb = np.array(sorted(self._tombstones), np.int64)
+        merged = merge_segments(
+            victims, tomb, self.lexicon, self.max_distance, segment_id=self._next_seg
+        )
+        self._next_seg += 1
+        survivors = [s for i, s in enumerate(self._segments) if i not in group_set]
+        if merged is not None:
+            survivors.append(merged)
+        self._segments = survivors
+        # tombstones absorbed by this merge are purged: each global doc
+        # lives in exactly one segment, so no other segment can hold them
+        self._tombstones -= self._covered_tombstones(victims)
+        self.stats["merges"] += 1
+
+    # -- snapshot / refresh -------------------------------------------------
+    def refresh(self) -> SegmentedView:
+        """Seal the memtable, drop fully-dead segments, run compaction, and
+        publish a new immutable snapshot."""
+        if self._mem.n_docs:
+            self._seal()
+        tomb = np.array(sorted(self._tombstones), np.int64)
+        live = [
+            seg
+            for seg in self._segments
+            if not bool(np.all(isin_sorted(tomb, seg.doc_map)))
+        ]
+        if len(live) != len(self._segments):
+            dropped = [s for s in self._segments if s not in live]
+            self._segments = live
+            for seg in dropped:
+                self._tombstones -= {int(g) for g in seg.doc_map}
+        self.maybe_compact()
+        self._snapshot = SegmentedView(
+            tuple(self._segments),
+            np.array(sorted(self._tombstones), np.int64),
+            self.lexicon,
+            self.max_distance,
+            self._next_doc,
+        )
+        return self._snapshot
+
+    def snapshot(self) -> SegmentedView:
+        """The last published immutable view (publishing one if none yet)."""
+        if self._snapshot is None:
+            return self.refresh()
+        return self._snapshot
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
+    # -- ProximityIndex read API (delegates to the current snapshot) -------
+    @property
+    def doc_lengths(self):
+        return self.snapshot().doc_lengths
+
+    @property
+    def ordinary(self):
+        return self.snapshot().ordinary
+
+    @property
+    def wv(self):
+        return self.snapshot().wv
+
+    @property
+    def fst(self):
+        return self.snapshot().fst
+
+    @property
+    def nsw(self):
+        return self.snapshot().nsw
+
+    @property
+    def has_additional(self) -> bool:
+        return self.snapshot().has_additional
+
+    def read_ordinary(self, lemma, meter=None):
+        return self.snapshot().read_ordinary(lemma, meter)
+
+    def read_wv(self, key, meter=None):
+        return self.snapshot().read_wv(key, meter)
+
+    def read_fst(self, key, meter=None):
+        return self.snapshot().read_fst(key, meter)
+
+    def live_doc_ids(self) -> np.ndarray:
+        return self.snapshot().live_doc_ids()
+
+    def size_report(self) -> dict:
+        return self.snapshot().size_report()
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        path = Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        if self._mem.n_docs:  # durability: everything buffered gets sealed
+            self._seal()
+        self.lexicon.save(path / "lexicon.json")
+        manifest = {
+            "format_version": 1,
+            "max_distance": self.max_distance,
+            "flags": self._flags,
+            "memtable_docs": self.memtable_docs,
+            "tier_fanout": self.tier_fanout,
+            "next_doc": self._next_doc,
+            "next_seg": self._next_seg,
+            "tombstones": sorted(self._tombstones),
+            "segments": [f"seg_{seg.segment_id:06d}" for seg in self._segments],
+        }
+        for seg in self._segments:
+            seg.save(path / f"seg_{seg.segment_id:06d}")
+        (path / "manifest.json").write_text(json.dumps(manifest))
+
+    @classmethod
+    def load(cls, path: str | Path) -> "SegmentedIndex":
+        path = Path(path)
+        manifest = json.loads((path / "manifest.json").read_text())
+        lexicon = Lexicon.load(path / "lexicon.json")
+        out = cls(
+            lexicon,
+            max_distance=manifest["max_distance"],
+            memtable_docs=manifest["memtable_docs"],
+            tier_fanout=manifest["tier_fanout"],
+            **manifest["flags"],
+        )
+        out._segments = [Segment.load(path / name, lexicon) for name in manifest["segments"]]
+        out._tombstones = set(manifest["tombstones"])
+        out._next_doc = manifest["next_doc"]
+        out._next_seg = manifest["next_seg"]
+        return out

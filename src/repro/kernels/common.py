@@ -34,3 +34,22 @@ def pad_to_multiple(x: jnp.ndarray, multiple: int, fill) -> jnp.ndarray:
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled (the
+    static checker cannot see through top_k / psum-reduced outputs).
+
+    Covers three API generations: top-level `jax.shard_map` with
+    `check_vma` (>= 0.5), top-level with the older `check_rep` spelling,
+    and `jax.experimental.shard_map` (0.4.x)."""
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    except TypeError:  # promoted to top level but pre-rename
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)

@@ -53,7 +53,7 @@ def sharded_embedding_lookup(table, ids, mesh, tp_axis="model", dp_axes=("data",
         out = _local_lookup(table_l, ids_l, rank, rows_per_shard)
         return jax.lax.psum(out, tp_axis)
 
-    from jax import shard_map
+    from repro.kernels.common import shard_map_compat as shard_map
 
     ndim_ids = ids.ndim
     if ids_pspec is None:
@@ -64,7 +64,6 @@ def sharded_embedding_lookup(table, ids, mesh, tp_axis="model", dp_axes=("data",
         mesh=mesh,
         in_specs=(P(tp_axis, None), ids_pspec),
         out_specs=out_spec,
-        check_vma=False,
     )(table, ids)
 
 
@@ -86,7 +85,7 @@ def sharded_embedding_bag(table, ids, mesh, weights=None, tp_axis="model", dp_ax
             rows = rows * w_l[..., None].astype(rows.dtype)
         return jax.lax.psum(rows.sum(axis=-2), tp_axis)
 
-    from jax import shard_map
+    from repro.kernels.common import shard_map_compat as shard_map
 
     nd = ids.ndim
     ids_spec = ids_pspec if ids_pspec is not None else P(dp_axes, *([None] * (nd - 1)))
@@ -99,12 +98,10 @@ def sharded_embedding_bag(table, ids, mesh, weights=None, tp_axis="model", dp_ax
             mesh=mesh,
             in_specs=(P(tp_axis, None), ids_spec),
             out_specs=out_spec,
-            check_vma=False,
         )(table, ids)
     return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(tp_axis, None), ids_spec, ids_spec),
         out_specs=out_spec,
-        check_vma=False,
     )(table, ids, weights)

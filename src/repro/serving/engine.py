@@ -19,7 +19,6 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.index_builder import ProximityIndex
 from repro.core.jax_search import decode_results, make_qt1_serve_step, pack_qt1_batch
 from repro.core.query import select_fst_keys
 
@@ -39,32 +38,50 @@ class SearchResponse:
 
 
 class SearchServingEngine:
-    """Bucketed, batched QT1 serving over a ProximityIndex."""
+    """Bucketed, batched QT1 serving over a ProximityIndex or a
+    snapshot-able incremental index (``repro.index.SegmentedIndex``).
+
+    Serving always runs against an *immutable* searcher snapshot: a drain
+    pins the snapshot once, so in-flight batches see a consistent view
+    even while the indexer seals memtables and runs background merges.
+    Call ``refresh()`` to pick up the indexer's latest published snapshot
+    (documents added/deleted since the previous refresh become visible;
+    the compiled serve step is reused — only the host-side packing sees
+    the new postings)."""
 
     def __init__(
         self,
-        index: ProximityIndex,
+        index,
         mesh,
         buckets: tuple = (1024, 4096, 16384, 65536),
         max_batch: int = 64,
         top_k: int = 16,
         doc_shards: int = 1,
     ):
-        self.index = index
+        self._source = index if hasattr(index, "snapshot") else None
+        self.index = index.snapshot() if self._source is not None else index
         self.mesh = mesh
         self.buckets = tuple(sorted(buckets))
         self.max_batch = max_batch
         self.doc_shards = doc_shards
         self.step = make_qt1_serve_step(mesh, top_k=top_k)
         self._queue: list[SearchRequest] = []
-        self.stats = {"batches": 0, "requests": 0, "bucket_hist": {b: 0 for b in self.buckets}}
+        self.stats = {"batches": 0, "requests": 0, "refreshes": 0,
+                      "bucket_hist": {b: 0 for b in self.buckets}}
 
-    def _bucket_for(self, lemma_ids) -> int:
+    def refresh(self) -> None:
+        """Swap in the indexer's latest published snapshot (no-op for a
+        static ProximityIndex)."""
+        if self._source is not None:
+            self.index = self._source.snapshot()
+            self.stats["refreshes"] += 1
+
+    def _bucket_for(self, index, lemma_ids) -> int:
         _, keys = select_fst_keys(list(lemma_ids))
         longest = 0
         for key in keys:
-            if self.index.fst is not None and key in self.index.fst:
-                longest = max(longest, self.index.fst.n_postings(key))
+            if index.fst is not None and key in index.fst:
+                longest = max(longest, index.fst.n_postings(key))
         for b in self.buckets:
             if longest <= b:
                 return b
@@ -74,20 +91,22 @@ class SearchServingEngine:
         self._queue.append(SearchRequest(list(lemma_ids)))
 
     def drain(self) -> list[SearchResponse]:
-        """Serve everything queued, one batch per bucket."""
+        """Serve everything queued, one batch per bucket. The snapshot is
+        pinned once for the whole drain."""
         out = []
+        index = self.index
         while self._queue:
             # group by bucket; serve the largest group first
             by_bucket: dict[int, list[SearchRequest]] = {}
             for r in self._queue:
-                by_bucket.setdefault(self._bucket_for(r.lemma_ids), []).append(r)
+                by_bucket.setdefault(self._bucket_for(index, r.lemma_ids), []).append(r)
             bucket, reqs = max(by_bucket.items(), key=lambda kv: len(kv[1]))
             reqs = reqs[: self.max_batch]
             for r in reqs:
                 self._queue.remove(r)
             t0 = time.perf_counter()
             batch = pack_qt1_batch(
-                self.index, [r.lemma_ids for r in reqs], L=bucket, K=2,
+                index, [r.lemma_ids for r in reqs], L=bucket, K=2,
                 doc_shards=self.doc_shards,
             )
             outs = self.step(*batch.device_args())

@@ -2,6 +2,8 @@
 
 import os
 
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # simulated host mesh:
+# never probe real accelerators (TPU metadata probing hangs off-GCP)
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import numpy as np  # noqa: E402

@@ -4,6 +4,8 @@ test_jax_search.py::test_doc_sharded_serving_multidevice."""
 
 import os
 
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # simulated host mesh:
+# never probe real accelerators (TPU metadata probing hangs off-GCP)
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np  # noqa: E402

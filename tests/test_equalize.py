@@ -1,6 +1,9 @@
 """Equalize: heap (§2.3), basic ([10]) and bulk (vectorized) must agree."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.equalize import (

@@ -1,6 +1,9 @@
 """Property tests for the paper §2.3 binary heaps."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.heaps import IteratorHeap

@@ -4,6 +4,8 @@ swept over shapes, and hypothesis property tests."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.common import SENTINEL

@@ -1,0 +1,302 @@
+"""Segmented incremental indexing (repro.index): cross-engine equivalence
+after adds/deletes/compactions, persistence round-trips, compaction
+policy, and live-refresh serving.
+
+The load-bearing property: a ``SegmentedIndex`` that absorbed the corpus
+through any sequence of memtable seals, tombstone deletes, size-tiered
+merges and forced compactions must answer QT1-QT5 *identically* (modulo
+the global->compact doc-id remap) to a from-scratch ``build_index`` over
+the final corpus — the response-time-guarantee structures may never
+drift under churn.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index, build_segment_index
+from repro.core.search import InvertedIndexEngine, ProximitySearchEngine
+from repro.data.corpus import TokenTable, generate_corpus
+from repro.index import SegmentedIndex, load_index, save_index, size_tiered_plan
+
+D = 5
+
+
+def _doc_tokens(table):
+    return table.to_doc_lists()
+
+
+@pytest.fixture(scope="module")
+def churned_world():
+    """90 docs streamed through small memtables; 12 deleted mid-stream;
+    tiered merges run along the way and a major compaction at the end."""
+    table, lex = generate_corpus(n_docs=90, mean_doc_len=60, vocab_size=400, seed=3)
+    lex.sw_count = 12
+    lex.fu_count = 25
+    docs = _doc_tokens(table)
+
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=10, tier_fanout=3)
+    for d in docs[:60]:
+        seg.add_document(d)
+    seg.refresh()
+    rng = np.random.default_rng(7)
+    dead = sorted(rng.choice(60, size=12, replace=False).tolist())
+    for g in dead:
+        seg.delete_document(g)
+    for d in docs[60:]:
+        seg.add_document(d)
+    seg.refresh()
+    seg.compact(force=True)
+    view = seg.refresh()
+
+    live = view.live_doc_ids()
+    final_docs = [np.array(docs[int(g)], np.int32) for g in live]
+    ftable = TokenTable.from_docs(final_docs)
+    ref_idx = build_index(ftable, lex, max_distance=D)
+    remap = {int(g): i for i, g in enumerate(live.tolist())}
+    return seg, view, lex, ftable, ref_idx, remap, set(dead)
+
+
+def _sample_query(ftable, lex, want, seed):
+    rng = np.random.default_rng(seed)
+    sw, fu = lex.sw_count, lex.fu_count
+    for _ in range(4000):
+        r = int(rng.integers(0, ftable.n_rows))
+        d0, p0 = int(ftable.doc_ids[r]), int(ftable.positions[r])
+        m = (ftable.doc_ids == d0) & (np.abs(ftable.positions - p0) <= D)
+        lems = np.unique(ftable.lemma_ids[m])
+        stop = lems[lems < sw]
+        freq = lems[(lems >= sw) & (lems < sw + fu)]
+        ordi = lems[lems >= sw + fu]
+        if want == "qt1" and stop.size >= 3:
+            return sorted(rng.choice(stop, 3, replace=False).tolist())
+        if want == "qt2" and freq.size >= 2:
+            return sorted(rng.choice(freq, 2, replace=False).tolist())
+        if want == "qt3" and ordi.size >= 2:
+            return sorted(rng.choice(ordi, 2, replace=False).tolist())
+        if want == "qt4" and freq.size >= 1 and ordi.size >= 1:
+            return sorted([int(rng.choice(freq)), int(rng.choice(ordi))])
+        if want == "qt5" and stop.size >= 1 and freq.size + ordi.size >= 2:
+            ns = np.concatenate([freq, ordi])
+            return sorted(rng.choice(ns, 2, replace=False).tolist() + [int(rng.choice(stop))])
+    return None
+
+
+def _records(matches, remap=None):
+    docs = matches.doc.tolist()
+    if remap is not None:
+        docs = [remap[int(x)] for x in docs]
+    return sorted(
+        zip(docs, matches.start.tolist(), matches.end.tolist(),
+            np.round(matches.score, 9).tolist())
+    )
+
+
+@pytest.mark.parametrize("want", ["qt1", "qt2", "qt3", "qt4", "qt5"])
+def test_cross_engine_equivalence(churned_world, want):
+    """Segmented + compacted == fresh rebuild, full (ID, P, E, R) records."""
+    seg, view, lex, ftable, ref_idx, remap, _ = churned_world
+    eng_seg = ProximitySearchEngine(view, top_k=10_000)
+    eng_ref = ProximitySearchEngine(ref_idx, top_k=10_000)
+    tested = 0
+    for trial in range(4):
+        q = _sample_query(ftable, lex, want, seed=100 + 31 * trial + ord(want[-1]))
+        if q is None:
+            continue
+        r_ref, _ = eng_ref.search_ids(q)
+        r_seg, _ = eng_seg.search_ids(q)
+        assert _records(r_ref) == _records(r_seg, remap), (want, q)
+        tested += 1
+    assert tested > 0, f"no {want} query sampled"
+
+
+def test_idx1_baseline_equivalence(churned_world):
+    seg, view, lex, ftable, ref_idx, remap, _ = churned_world
+    b_ref = InvertedIndexEngine(ref_idx, top_k=10_000)
+    b_seg = InvertedIndexEngine(view, top_k=10_000)
+    q = _sample_query(ftable, lex, "qt1", seed=999)
+    r1, _ = b_ref.search_ids(q)
+    r2, _ = b_seg.search_ids(q)
+    assert _records(r1) == _records(r2, remap)
+
+
+def test_deleted_docs_not_served(churned_world):
+    seg, view, lex, ftable, ref_idx, remap, dead = churned_world
+    assert not (set(int(g) for g in view.live_doc_ids()) & dead)
+    eng = ProximitySearchEngine(view, top_k=10_000)
+    for trial in range(3):
+        q = _sample_query(ftable, lex, "qt1", seed=55 + trial)
+        r, _ = eng.search_ids(q)
+        assert not (set(int(x) for x in r.doc) & dead)
+
+
+def test_single_shot_build_is_one_segment():
+    """build_index routes through MemSegment; output must equal the direct
+    segment build bit-for-bit (same blobs, same sizes)."""
+    table, lex = generate_corpus(n_docs=30, mean_doc_len=40, vocab_size=300, seed=5)
+    lex.sw_count = 10
+    lex.fu_count = 20
+    i1 = build_index(table, lex, max_distance=D)
+    i2 = build_segment_index(table, lex, max_distance=D)
+    assert i1.size_report() == i2.size_report()
+    for l in list(i1.ordinary.keys())[:20]:
+        for a, b in zip(i1.read_ordinary(l), i2.read_ordinary(l)):
+            assert np.array_equal(a, b)
+
+
+def test_refresh_visibility():
+    """Adds are invisible until refresh(); snapshots are stable."""
+    table, lex = generate_corpus(n_docs=20, mean_doc_len=40, vocab_size=300, seed=11)
+    lex.sw_count = 10
+    lex.fu_count = 20
+    docs = _doc_tokens(table)
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=100)
+    for d in docs[:10]:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    n1 = v1.live_doc_ids().size
+    for d in docs[10:]:
+        seg.add_document(d)
+    # not yet refreshed: the published snapshot is unchanged
+    assert seg.snapshot() is v1
+    assert seg.snapshot().live_doc_ids().size == n1
+    v2 = seg.refresh()
+    assert v2.live_doc_ids().size == len(docs)
+    # old snapshot still consistent (immutable)
+    assert v1.live_doc_ids().size == n1
+
+
+def test_size_tiered_plan_and_auto_compaction():
+    table, lex = generate_corpus(n_docs=64, mean_doc_len=30, vocab_size=300, seed=13)
+    lex.sw_count = 10
+    lex.fu_count = 20
+    docs = _doc_tokens(table)
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=4, tier_fanout=4)
+    for d in docs:
+        seg.add_document(d)
+    seg.refresh()
+    # 64 docs / 4-doc memtables = 16 seals; fanout-4 tiering must have
+    # merged repeatedly and kept the live segment count well below that
+    assert seg.stats["seals"] == 16
+    assert seg.stats["merges"] >= 1
+    assert seg.n_segments < 16
+    assert not size_tiered_plan(seg._segments, seg.tier_fanout)
+
+
+def test_multi_tier_plan_merges_without_staleness():
+    """Two tiers due simultaneously: maybe_compact must replan after each
+    merge (stale indices once crashed / could duplicate docs)."""
+    _, lex = generate_corpus(n_docs=5, mean_doc_len=10, vocab_size=100, seed=1)
+    lex.sw_count = 5
+    lex.fu_count = 10
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=10**9, tier_fanout=3)
+
+    def seal_batch(docs):
+        mem = seg._new_mem()
+        base = seg._next_doc
+        for i, t in enumerate(docs):
+            mem.add_document(base + i, t)
+        seg._next_doc = base + len(docs)
+        seg._segments.append(mem.seal(seg._next_seg))
+        seg._next_seg += 1
+
+    for _ in range(3):
+        seal_batch([[1, 2, 3]] * 2)  # small tier
+    for _ in range(3):
+        seal_batch([[k % 50 for k in range(400)]] * 2)  # big tier
+    assert len(size_tiered_plan(seg._segments, 3)) >= 2
+    seg.maybe_compact()
+    view = seg.refresh()
+    all_docs = np.concatenate([s.doc_map for s in seg._segments])
+    assert np.unique(all_docs).size == all_docs.size == seg._next_doc
+    assert view.live_doc_ids().size == seg._next_doc
+
+
+def test_delete_idempotent_across_compaction():
+    """Re-deleting a doc whose tombstone was purged by compaction must not
+    resurrect an unpurgeable tombstone."""
+    table, lex = generate_corpus(n_docs=12, mean_doc_len=20, vocab_size=200, seed=2)
+    lex.sw_count = 8
+    lex.fu_count = 16
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=4)
+    gids = [seg.add_document(d) for d in _doc_tokens(table)]
+    seg.refresh()
+    seg.delete_document(gids[0])
+    deleted_count = seg.stats["docs_deleted"]
+    seg.compact(force=True)
+    view = seg.refresh()
+    assert view.tombstones.size == 0  # purged by the merge
+    seg.delete_document(gids[0])  # retry: must be a no-op
+    seg.delete_document(gids[0])
+    assert seg.refresh().tombstones.size == 0
+    assert seg.stats["docs_deleted"] == deleted_count
+    assert seg.refresh().live_doc_ids().size == len(gids) - 1
+
+
+def test_segmented_save_load_roundtrip(tmp_path, churned_world):
+    seg, view, lex, ftable, ref_idx, remap, _ = churned_world
+    seg.save(tmp_path / "idx")
+    seg2 = SegmentedIndex.load(tmp_path / "idx")
+    v2 = seg2.refresh()
+    assert np.array_equal(view.live_doc_ids(), v2.live_doc_ids())
+    eng1 = ProximitySearchEngine(view, top_k=10_000)
+    eng2 = ProximitySearchEngine(v2, top_k=10_000)
+    for want in ("qt1", "qt5"):
+        q = _sample_query(ftable, lex, want, seed=77)
+        r1, s1 = eng1.search_ids(q)
+        r2, s2 = eng2.search_ids(q)
+        assert _records(r1) == _records(r2)
+        assert s1.bytes_read == s2.bytes_read  # identical encoded blobs
+
+
+def test_plain_index_save_load_roundtrip(tmp_path):
+    table, lex = generate_corpus(n_docs=30, mean_doc_len=40, vocab_size=300, seed=5)
+    lex.sw_count = 10
+    lex.fu_count = 20
+    idx = build_index(table, lex, max_distance=D)
+    save_index(idx, tmp_path / "plain")
+    idx2 = load_index(tmp_path / "plain")
+    assert idx.size_report() == idx2.size_report()
+    eng1 = ProximitySearchEngine(idx, top_k=1000)
+    eng2 = ProximitySearchEngine(idx2, top_k=1000)
+    stop = [l for l in range(lex.sw_count)][:3]
+    r1, _ = eng1.search_ids(stop)
+    r2, _ = eng2.search_ids(stop)
+    assert _records(r1) == _records(r2)
+
+
+def test_serving_refresh_protocol(churned_world):
+    """The bucketed JAX serve path runs unchanged over SegmentedIndex and
+    picks up new/deleted docs via engine.refresh()."""
+    from repro.launch.mesh import make_mesh
+    from repro.serving.engine import SearchServingEngine
+
+    seg, view, lex, ftable, ref_idx, remap, _ = churned_world
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = SearchServingEngine(seg, mesh, buckets=(256, 1024, 4096), max_batch=8, top_k=16)
+    ref = ProximitySearchEngine(view, top_k=16, equalize_mode="bulk")
+    served = 0
+    for trial in range(4):
+        q = _sample_query(ftable, lex, "qt1", seed=300 + trial)
+        if q is None:
+            continue
+        eng.submit(q)
+        (resp,) = eng.drain()
+        want, _ = ref.search_ids(q)
+        got = set(zip(resp.results["doc"].tolist(), resp.results["start"].tolist()))
+        assert got <= set(zip(want.doc.tolist(), want.start.tolist()))
+        if want.size:
+            assert got
+        served += 1
+    assert served > 0
+    # live refresh: delete a doc that was being served; re-drain sees it gone
+    q = _sample_query(ftable, lex, "qt1", seed=301)
+    eng.submit(q)
+    (resp,) = eng.drain()
+    if resp.results["doc"].size:
+        victim = int(resp.results["doc"][0])
+        seg.delete_document(victim)
+        seg.refresh()
+        eng.refresh()
+        eng.submit(q)
+        (resp2,) = eng.drain()
+        assert victim not in set(resp2.results["doc"].tolist())
