@@ -5,27 +5,40 @@ Sections:
   search/*    — the paper's Idx1 vs Idx2/3/4 experiment (Figs. 6-9);
   equalize/*  — §2.3 heap vs basic Equalize scaling;
   kernel/*    — posting-intersection / proximity / embedding-bag ops;
-  serve/*     — compiled QT1 serve-step latency per bucket;
+  serve/*     — compiled QT1 serve-step latency per bucket, packed-posting
+                cache cold/warm packing, and engine drains
+                uncached/cached/compressed;
   churn/*     — segmented-index throughput + latency under add/delete/
-                merge churn (repro.index).
+                merge churn (repro.index), incl. serve-cache hit rate.
 
 Quick mode (default) uses a reduced corpus; --full matches the corpus
-scale used in EXPERIMENTS.md.
+scale used in EXPERIMENTS.md; --smoke is the tiny-corpus CI invocation.
+``--json [PATH]`` writes the serve + churn reports (cache hit rates,
+cold/warm drain latencies) to PATH (default BENCH_serve.json) so the
+perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="EXPERIMENTS.md-scale corpus")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus, few reps (CI smoke)")
     ap.add_argument("--only", default=None, help="comma-separated section filter")
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json", default=None,
+                    metavar="PATH",
+                    help="write serve+churn reports as JSON (default %(const)s)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     rows: list[tuple] = []
+    reports: dict = {}
 
     def want(section: str) -> bool:
         return only is None or section in only
@@ -53,20 +66,38 @@ def main() -> None:
     if want("serve"):
         from benchmarks import serve_bench
 
-        rows += serve_bench.run()
+        serve_rows, serve_rep = serve_bench.run(smoke=args.smoke)
+        rows += serve_rows
+        reports["serve"] = serve_rep
 
     if want("churn"):
         from benchmarks import churn_bench
 
         if args.full:
-            rep = churn_bench.run()
+            rep = churn_bench.run(serve=True)
+        elif args.smoke:
+            rep = churn_bench.run(n_docs=150, chunk=40, memtable_docs=24, serve=True)
         else:
-            rep = churn_bench.run(n_docs=400, chunk=40)
+            rep = churn_bench.run(n_docs=400, chunk=40, serve=True)
         rows += churn_bench.rows(rep)
+        reports["churn"] = rep
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        payload = {
+            "python": platform.python_version(),
+            "mode": "full" if args.full else ("smoke" if args.smoke else "quick"),
+            "rows": [
+                {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows
+            ],
+            "reports": reports,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,45 +1,139 @@
-"""Compiled QT1 serve-step throughput (single host device): the compiled
-per-bucket latency IS the response-time guarantee (DESIGN.md §3)."""
+"""Serve-path benchmarks: compiled QT1 step latency per bucket (the
+response-time guarantee, DESIGN.md §3) plus the host hot path around it
+(DESIGN.md §11) — packed-posting-cache cold vs warm packing, and engine
+drains uncompressed vs warm-cache vs compressed.
+
+``run()`` returns ``(rows, report)``: CSV rows for the harness and a
+nested dict that ``benchmarks/run.py --json`` writes to BENCH_serve.json
+so the perf trajectory is tracked across PRs.
+"""
 
 from __future__ import annotations
 
 import time
 
-import numpy as np
 import jax
 
 from repro.core.index_builder import build_index
 from repro.core.jax_search import make_qt1_serve_step, pack_qt1_batch
 from repro.data.corpus import generate_corpus, sample_stop_queries
 from repro.launch.mesh import make_mesh
+from repro.serving.engine import SearchServingEngine
+from repro.serving.pack_cache import PackedPostingCache
 
 
-def run():
+def _measure_drains(variants, queries, rounds: int) -> dict:
+    """Mean per-drain latency per variant, measured *interleaved*: one
+    drain of each engine per round, so slow system drift over the
+    measurement window is shared by all variants instead of being
+    attributed to whichever ran last. One unmeasured warmup drain each
+    (jit compile + cache fill are reported separately)."""
+    for _, eng in variants:
+        for q in queries:
+            eng.submit(q)
+        eng.drain()
+    totals = {name: 0.0 for name, _ in variants}
+    for _ in range(rounds):
+        for name, eng in variants:
+            for q in queries:
+                eng.submit(q)
+            t0 = time.perf_counter()
+            eng.drain()
+            totals[name] += time.perf_counter() - t0
+    return {name: t / rounds * 1e6 for name, t in totals.items()}
+
+
+def run(smoke: bool = False):
     rows = []
-    table, lex = generate_corpus(n_docs=1500, mean_doc_len=150, vocab_size=20_000, seed=3)
+    rep: dict = {"step": {}, "pack": {}, "drain": {}}
+    if smoke:
+        n_docs, vocab, n_q, reps, rounds = 300, 4000, 16, 3, 3
+        shapes = ((16, 1024),)
+        eng_L, eng_B = 1024, 16
+    else:
+        n_docs, vocab, n_q, reps, rounds = 1500, 20_000, 64, 10, 8
+        shapes = ((16, 4096), (64, 4096), (64, 16384))
+        eng_L, eng_B = 4096, 64
+    table, lex = generate_corpus(
+        n_docs=n_docs, mean_doc_len=150, vocab_size=vocab, seed=3
+    )
     idx = build_index(table, lex, max_distance=5)
-    queries = sample_stop_queries(table, lex, 64, window=3, seed=5)
+    queries = sample_stop_queries(table, lex, n_q, window=3, seed=5)
     mesh = make_mesh((1, 1), ("data", "model"))
+
+    # -- compiled step latency per (B, L) bucket ---------------------------
     step = make_qt1_serve_step(mesh, top_k=16)
-    for B, L in ((16, 4096), (64, 4096), (64, 16384)):
+    for B, L in shapes:
         qs = (queries * ((B // len(queries)) + 1))[:B]
         batch = pack_qt1_batch(idx, qs, L=L, K=2)
         args = batch.device_args()
         out = step(*args)
         jax.block_until_ready(out)
         t0 = time.perf_counter()
-        reps = 10
         for _ in range(reps):
             out = step(*args)
         jax.block_until_ready(out)
         dt = (time.perf_counter() - t0) / reps
+        rep["step"][f"B{B}_L{L}_us"] = dt * 1e6
         rows.append((
             f"serve/qt1_B{B}_L{L}", dt * 1e6,
             f"queries_per_s={B / dt:.1f};postings_per_s={B * 2 * L / dt:.3e}",
         ))
-    return rows
+
+    # -- host packing: per-drain re-derivation vs warm cache row gathers ---
+    # (interleaved for the same drift-sharing reason as _measure_drains)
+    qs = (queries * ((eng_B // len(queries)) + 1))[:eng_B]
+    cache = PackedPostingCache()
+    pack_qt1_batch(idx, qs, L=eng_L, K=2, cache=cache)  # warm it
+    cold = warm = 0.0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        pack_qt1_batch(idx, qs, L=eng_L, K=2)
+        cold += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pack_qt1_batch(idx, qs, L=eng_L, K=2, cache=cache)
+        warm += time.perf_counter() - t0
+    cold /= reps
+    warm /= reps
+    rep["pack"] = {
+        "cold_us": cold * 1e6,
+        "warm_us": warm * 1e6,
+        "speedup": cold / warm,
+        "cache": cache.stats,
+    }
+    rows.append((f"serve/pack_cold_B{eng_B}_L{eng_L}", cold * 1e6, ""))
+    rows.append((
+        f"serve/pack_warm_B{eng_B}_L{eng_L}", warm * 1e6,
+        f"speedup_vs_cold={cold / warm:.2f};hit_rate={cache.stats['hit_rate']:.3f}",
+    ))
+
+    # -- engine drains: seed path vs warm cache vs compressed --------------
+    mk = lambda **kw: SearchServingEngine(  # noqa: E731
+        idx, mesh, buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw
+    )
+    variants = (
+        ("uncached", mk(use_pack_cache=False)),
+        ("cached", mk()),
+        ("compressed", mk(compressed=True)),
+    )
+    lat = _measure_drains(variants, qs, rounds)
+    for name, eng in variants:
+        us = lat[name]
+        d = rep["drain"][name] = {"us": us, "per_query_us": us / eng_B}
+        derived = f"per_query_us={us / eng_B:.1f}"
+        if eng.pack_cache is not None:
+            d["cache_hit_rate"] = eng.pack_cache.stats["hit_rate"]
+            derived += f";cache_hit_rate={d['cache_hit_rate']:.3f}"
+        if eng.compressed:
+            d["offset_fallbacks"] = eng.stats["offset_fallbacks"]
+            derived += f";offset_fallbacks={d['offset_fallbacks']}"
+        rows.append((f"serve/drain_{name}_B{eng_B}_L{eng_L}", us, derived))
+    rep["drain"]["warm_vs_uncached_speedup"] = (
+        rep["drain"]["uncached"]["us"] / rep["drain"]["cached"]["us"]
+    )
+    return rows, rep
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
+    for name, us, derived in run()[0]:
         print(f"{name},{us:.1f},{derived}")

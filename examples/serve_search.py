@@ -23,6 +23,8 @@ def main() -> None:
     ap.add_argument("--n-docs", type=int, default=3000)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--max-distance", type=int, default=5)
+    ap.add_argument("--compressed", action="store_true",
+                    help="serve the delta-coded posting payload (DESIGN.md §11)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -34,23 +36,29 @@ def main() -> None:
           f"{len(index.fst.counts)} (f,s,t) keys, {len(index.wv.counts)} (w,v) keys")
 
     mesh = make_mesh((1, 1), ("data", "model"))
-    engine = SearchServingEngine(index, mesh, max_batch=64, top_k=8)
+    engine = SearchServingEngine(index, mesh, max_batch=64, top_k=8,
+                                 compressed=args.compressed)
 
     queries = sample_stop_queries(table, lex, args.requests, window=3, seed=2)
-    for q in queries:
-        engine.submit(q)
-    t0 = time.time()
-    responses = engine.drain()
-    wall = time.time() - t0
-    lat = np.array([r.latency_s for r in responses])
-    n_hits = sum(1 for r in responses if r.results["doc"].size > 0)
-    print(f"\nserved {len(responses)} requests in {wall:.2f}s "
-          f"({len(responses)/wall:.1f} qps)")
-    print(f"batch latency p50={np.percentile(lat,50)*1000:.1f}ms "
-          f"p99={np.percentile(lat,99)*1000:.1f}ms")
-    print(f"requests with hits: {n_hits}/{len(responses)}")
+    for round_name in ("cold", "warm"):  # warm: packed rows come from cache
+        for q in queries:
+            engine.submit(q)
+        t0 = time.time()
+        responses = engine.drain()
+        wall = time.time() - t0
+        lat = np.array([r.latency_s for r in responses])
+        n_hits = sum(1 for r in responses if r.results["doc"].size > 0)
+        print(f"\n[{round_name}] served {len(responses)} requests in {wall:.2f}s "
+              f"({len(responses)/wall:.1f} qps)")
+        print(f"batch latency p50={np.percentile(lat,50)*1000:.1f}ms "
+              f"p99={np.percentile(lat,99)*1000:.1f}ms")
+        print(f"requests with hits: {n_hits}/{len(responses)}")
     print(f"bucket histogram: {engine.stats['bucket_hist']}")
     print(f"batches: {engine.stats['batches']}")
+    print(f"pack cache: {engine.stats['pack_cache']}")
+    if args.compressed:
+        print(f"compressed batches: {engine.stats['compressed_batches']} "
+              f"(offsets fallbacks: {engine.stats['offset_fallbacks']})")
 
 
 if __name__ == "__main__":

@@ -130,7 +130,8 @@ def make_qt1_serve_step_compressed(mesh, top_k: int = 16, delta_g: bool = True):
     payload is compressed in HBM and decompressed on the fly.
 
     * fragment bounds ride as uint8 offsets from the anchor (|off| <=
-      MaxDistance <= 127 by construction) instead of two int32 streams;
+      MaxDistance, which must be <= 254 — 255 marks padding; checked at
+      engine construction) instead of two int32 streams;
     * with delta_g, anchor keys are block-delta-coded: one int32 base per
       64-posting block + uint16 in-block deltas (doc strides bound the
       in-block range; blocks with wider span fall back via the packer).
@@ -151,7 +152,7 @@ def make_qt1_serve_step_compressed(mesh, top_k: int = 16, delta_g: bool = True):
             key_g = key_delta
         lo = key_g - key_lo_off.astype(jnp.int32)
         hi = key_g + key_hi_off.astype(jnp.int32)
-        # SENTINEL-preservation: padding slots carry delta==0xFFFF
+        # SENTINEL-preservation: padding slots are marked by lo_off==255
         pad = key_lo_off == 255
         key_g = jnp.where(pad, SENTINEL, key_g)
         valid, lo, hi = qt1_join(key_g, lo, hi)
@@ -208,10 +209,15 @@ def compress_qt1_batch(batch: "QT1Batch", delta_g: bool = True):
     assert L % BLK == 0
     nb = L // BLK
     gb = g.reshape(B, K, nb, BLK)
-    base = gb[..., 0]
     is_pad = gb == SENTINEL
+    # per-block base = min over live postings, not element 0: with
+    # doc_shards > 1 a block can straddle a shard-segment boundary and
+    # *start* with padding while holding live keys later — anchoring on
+    # the min keeps every delta non-negative (and minimal)
+    live_min = np.where(is_pad, np.int64(SENTINEL), gb).min(axis=-1)
+    base = np.where(live_min == np.int64(SENTINEL), 0, live_min)
     delta = np.where(is_pad, 0, gb - base[..., None])
-    if delta.max() >= 2**16:
+    if delta.max(initial=0) >= 2**16:
         raise ValueError("in-block key span exceeds uint16; use offsets format")
     return (
         jnp.asarray(base.astype(np.int32)),
@@ -245,32 +251,106 @@ class QT1Batch:
         )
 
 
+def qt1_stride(index) -> int:
+    """Document stride of the g = doc * stride + pos packing. Derived only
+    from the (immutable) index, so every batch packed against one snapshot
+    agrees on it."""
+    max_len = int(index.doc_lengths.max()) if index.doc_lengths is not None else 1
+    return max_len + index.max_distance + 2
+
+
+def batch_size_bucket(n: int, cap: int) -> int:
+    """Round a batch size up to the next power of two, capped at `cap`.
+
+    The serve step is jit-compiled per (B, K, L) shape; padding B to this
+    small ladder means at most log2(cap)+1 compiles per L-bucket instead
+    of one silent recompile for every batch size the queue happens to
+    produce."""
+    b = 1
+    while b < n and b < cap:
+        b <<= 1
+    return min(b, cap)
+
+
+def pack_fst_key_rows(
+    index,
+    key,
+    L: int,
+    doc_shards: int = 1,
+    stride: int | None = None,
+    out=None,
+):
+    """Derive the padded, range-partitioned device rows for one (f,s,t) key.
+
+    Returns ``(g, lo, hi, present)``: three (L,) int32 rows plus whether
+    the key exists in the index. Postings are range-partitioned into
+    doc_shards contiguous doc ranges, each padded to L // doc_shards — so
+    that sharding the L axis over the mesh's model axis puts aligned doc
+    ranges on the same shard (the alignment invariant of the distributed
+    join). Rows depend only on (snapshot, key, L, doc_shards): this is the
+    unit the serving layer's PackedPostingCache memoizes (DESIGN.md §11).
+
+    With ``out`` (three caller-provided (L,) views, already
+    SENTINEL-filled — e.g. slices of the batch arrays) postings are
+    written in place and no rows are allocated, keeping the uncached
+    packing path copy-free."""
+    if stride is None:
+        stride = qt1_stride(index)
+    assert L % doc_shards == 0
+    Ls = L // doc_shards
+    if out is None:
+        g_row = np.full(L, SENTINEL, np.int32)
+        lo_row = np.full(L, SENTINEL, np.int32)
+        hi_row = np.full(L, SENTINEL, np.int32)
+    else:
+        g_row, lo_row, hi_row = out
+    if index.fst is None or key not in index.fst:
+        return g_row, lo_row, hi_row, False
+    docs, pf, o1, o2 = index.read_fst(key)
+    g = (docs * stride + pf).astype(np.int64)
+    lo = pf + np.minimum(np.minimum(o1, o2), 0) + docs * stride
+    hi = pf + np.maximum(np.maximum(o1, o2), 0) + docs * stride
+    n_docs = index.doc_lengths.size
+    lo_bound = 0
+    for s in range(doc_shards):
+        hi_bound = ((s + 1) * n_docs) // doc_shards
+        m = (docs >= lo_bound) & (docs < hi_bound)
+        seg = min(int(m.sum()), Ls)
+        sl = slice(s * Ls, s * Ls + seg)
+        g_row[sl] = g[m][:seg]
+        lo_row[sl] = lo[m][:seg]
+        hi_row[sl] = hi[m][:seg]
+        lo_bound = hi_bound
+    return g_row, lo_row, hi_row, True
+
+
 def pack_qt1_batch(
     index: ProximityIndex,
     queries: list[list[int]],
     L: int,
     K: int = 2,
     doc_shards: int = 1,
+    cache=None,
 ) -> QT1Batch:
     """Pack QT1 queries into fixed-shape device arrays.
 
-    Each key's postings are *range-partitioned* into doc_shards contiguous
-    doc ranges, each padded to L // doc_shards — so that sharding the L
-    axis over the mesh's model axis puts aligned doc ranges on the same
-    shard (the alignment invariant of the distributed join).
+    Per-key row derivation lives in :func:`pack_fst_key_rows`; with
+    `cache` (a ``repro.serving.pack_cache.PackedPostingCache``) the rows
+    of hot keys are served from memory instead of being re-derived from
+    segment reads — packing becomes B*K row copies.
+
+    An empty query is a batch-shape padding slot: its rows stay
+    all-SENTINEL and its idf_sum is 0, so it scores NEG_INF everywhere
+    and decodes to zero results.
 
     INVARIANT: doc_shards must equal the serving mesh's model-axis size.
-    Each segment is sorted *locally*; the concatenated row is not globally
-    sorted, so the searchsorted-based join is only correct when each model
-    shard sees exactly one segment."""
+    Each range-partitioned segment is sorted *locally*; the concatenated
+    row is not globally sorted, so the searchsorted-based join is only
+    correct when each model shard sees exactly one segment."""
     B = len(queries)
     lex = index.lexicon
-    max_len = int(index.doc_lengths.max()) if index.doc_lengths is not None else 1
-    stride = max_len + index.max_distance + 2
-    n_docs = index.doc_lengths.size
+    stride = qt1_stride(index)
     assert L % doc_shards == 0
-    Ls = L // doc_shards
-    shard_doc_hi = [((s + 1) * n_docs) // doc_shards for s in range(doc_shards)]
 
     key_g = np.full((B, K, L), SENTINEL, np.int32)
     key_lo = np.full((B, K, L), SENTINEL, np.int32)
@@ -279,50 +359,65 @@ def pack_qt1_batch(
     span_adj = np.zeros(B, np.float32)
 
     for qi, q in enumerate(queries):
+        if not q:
+            continue  # padding slot
         _, keys = select_fst_keys(q)
         keys = (keys + [keys[-1]] * K)[:K]  # pad by repeating (idempotent join)
-        idf_sum[qi] = sum(lex.idf(l) for l in q)
         span_adj[qi] = len(q) - 1
+        any_present = False
         for ki, key in enumerate(keys):
-            if index.fst is None or key not in index.fst:
-                continue  # all-SENTINEL -> no matches for this query
-            docs, pf, o1, o2 = index.read_fst(key)
-            g = (docs * stride + pf).astype(np.int64)
-            lo = pf + np.minimum(np.minimum(o1, o2), 0) + docs * stride
-            hi = pf + np.maximum(np.maximum(o1, o2), 0) + docs * stride
-            lo_bound = 0
-            for s in range(doc_shards):
-                hi_bound = shard_doc_hi[s]
-                m = (docs >= lo_bound) & (docs < hi_bound)
-                seg = min(int(m.sum()), Ls)
-                sl = slice(s * Ls, s * Ls + seg)
-                key_g[qi, ki, sl] = g[m][:seg]
-                key_lo[qi, ki, sl] = lo[m][:seg]
-                key_hi[qi, ki, sl] = hi[m][:seg]
-                lo_bound = hi_bound
-        if all((index.fst is None or k not in index.fst) for k in keys):
-            idf_sum[qi] = 0.0
+            if cache is not None:
+                g_row, lo_row, hi_row, present = cache.get_rows(
+                    index, key, L, doc_shards, stride
+                )
+                if present:
+                    key_g[qi, ki] = g_row
+                    key_lo[qi, ki] = lo_row
+                    key_hi[qi, ki] = hi_row
+            else:  # write postings straight into the batch arrays
+                _, _, _, present = pack_fst_key_rows(
+                    index, key, L, doc_shards, stride,
+                    out=(key_g[qi, ki], key_lo[qi, ki], key_hi[qi, ki]),
+                )
+            any_present = any_present or present
+        if any_present:
+            idf_sum[qi] = sum(lex.idf(l) for l in q)
     return QT1Batch(key_g, key_lo, key_hi, idf_sum, span_adj, stride)
 
 
 def decode_results(batch: QT1Batch, top_s, top_g, top_lo, top_hi):
-    """Device top-k -> per-query (doc, start, end, score) numpy records."""
+    """Device top-k -> per-query (doc, start, end, score) numpy records.
+
+    Vectorized: one host transfer of the (B, k) score matrix decides which
+    rows matter; fully masked rows never cross device->host (the g/lo/hi
+    gather is restricted to surviving rows), and the stride divmod runs
+    once over all surviving entries instead of per query."""
     s = np.asarray(top_s)
-    g = np.asarray(top_g)
-    lo = np.asarray(top_lo).astype(np.int64)
-    hi = np.asarray(top_hi).astype(np.int64)
-    out = []
-    for qi in range(s.shape[0]):
-        m = s[qi] > -1e29
-        doc = g[qi][m] // batch.stride
-        start = lo[qi][m] % batch.stride
-        end = hi[qi][m] % batch.stride
-        out.append(
-            {
-                "doc": doc.astype(np.int64),
-                "start": start,
-                "end": end,
-                "score": s[qi][m],
-            }
-        )
+    valid = s > -1e29
+    B = s.shape[0]
+    z = np.zeros(0, np.int64)
+    out = [
+        {"doc": z, "start": z, "end": z, "score": np.zeros(0, s.dtype)}
+        for _ in range(B)
+    ]
+    rows = np.flatnonzero(valid.any(axis=1))
+    if rows.size == 0:
+        return out
+    g = np.asarray(top_g[rows]).astype(np.int64)
+    lo = np.asarray(top_lo[rows]).astype(np.int64)
+    hi = np.asarray(top_hi[rows]).astype(np.int64)
+    vm = valid[rows]
+    doc = g[vm] // batch.stride
+    start = lo[vm] % batch.stride
+    end = hi[vm] % batch.stride
+    score = s[rows][vm]
+    splits = np.cumsum(vm.sum(axis=1))[:-1]
+    for qi, d, st, en, sc in zip(
+        rows.tolist(),
+        np.split(doc, splits),
+        np.split(start, splits),
+        np.split(end, splits),
+        np.split(score, splits),
+    ):
+        out[qi] = {"doc": d, "start": st, "end": en, "score": sc}
     return out

@@ -7,7 +7,7 @@ persistence, tombstone deletes, size-tiered background compaction, and a
 from repro.index.compaction import merge_segments, size_tiered_plan
 from repro.index.persist import load_index, save_index
 from repro.index.segment import MemSegment, Segment
-from repro.index.segmented import SegmentedIndex, SegmentedView
+from repro.index.segmented import SegmentedIndex, SegmentedView, snapshot_token
 
 __all__ = [
     "MemSegment",
@@ -18,4 +18,5 @@ __all__ = [
     "size_tiered_plan",
     "save_index",
     "load_index",
+    "snapshot_token",
 ]

@@ -27,6 +27,7 @@ re-ranking would invalidate every sealed segment.
 
 from __future__ import annotations
 
+import itertools
 import json
 import threading
 from collections import OrderedDict
@@ -43,6 +44,27 @@ from repro.index.merge import isin_sorted, merged_key_read, merged_nsw_read
 from repro.index.segment import MemSegment, Segment
 
 _CACHE_CAP = 4096  # merged-read entries per snapshot
+
+_SNAPSHOT_IDS = itertools.count(1)
+
+
+def snapshot_token(index) -> int:
+    """Stable identity of an immutable searcher view, for external caches
+    (e.g. the serving layer's packed-posting cache, DESIGN.md §11).
+
+    ``SegmentedView`` carries a process-unique ``snapshot_id`` minted at
+    construction — two distinct snapshots never share a token, even if one
+    is garbage-collected and the other reuses its memory. Static
+    ``ProximityIndex`` objects are immutable for their lifetime, so their
+    ``id()`` is a valid token as long as the caller keeps a reference
+    (serving engines do). A mutable ``SegmentedIndex`` delegates to its
+    current published snapshot."""
+    tok = getattr(index, "snapshot_id", None)
+    if tok is not None:
+        return tok
+    if hasattr(index, "snapshot"):
+        return index.snapshot().snapshot_id
+    return id(index)
 
 
 class _MergedStore:
@@ -117,7 +139,13 @@ class SegmentedView:
         lexicon: Lexicon,
         max_distance: int,
         n_total_docs: int,
+        epoch: int = 0,
     ):
+        # identity for external caches: `epoch` is the publisher's refresh
+        # counter (human-meaningful), `snapshot_id` is process-unique and
+        # never reused — cache keys must use snapshot_id (DESIGN.md §11)
+        self.epoch = int(epoch)
+        self.snapshot_id = next(_SNAPSHOT_IDS)
         self.segments = tuple(segments)
         self.tombstones = np.sort(np.asarray(tombstones, np.int64))
         self.lexicon = lexicon
@@ -253,6 +281,7 @@ class SegmentedIndex:
         self._next_seg = 0
         self._mem = self._new_mem()
         self._snapshot: SegmentedView | None = None
+        self._epoch = 0
         self.stats = {"seals": 0, "merges": 0, "docs_added": 0, "docs_deleted": 0}
 
     def _new_mem(self) -> MemSegment:
@@ -375,12 +404,14 @@ class SegmentedIndex:
             for seg in dropped:
                 self._tombstones -= {int(g) for g in seg.doc_map}
         self.maybe_compact()
+        self._epoch += 1
         self._snapshot = SegmentedView(
             tuple(self._segments),
             np.array(sorted(self._tombstones), np.int64),
             self.lexicon,
             self.max_distance,
             self._next_doc,
+            epoch=self._epoch,
         )
         return self._snapshot
 

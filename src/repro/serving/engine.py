@@ -14,13 +14,22 @@ Search serving (the end-to-end driver of examples/serve_search.py):
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.jax_search import decode_results, make_qt1_serve_step, pack_qt1_batch
+from repro.core.jax_search import (
+    batch_size_bucket,
+    compress_qt1_batch,
+    decode_results,
+    make_qt1_serve_step,
+    make_qt1_serve_step_compressed,
+    pack_qt1_batch,
+)
 from repro.core.query import select_fst_keys
+from repro.serving.pack_cache import PackedPostingCache
 
 
 @dataclass
@@ -46,8 +55,24 @@ class SearchServingEngine:
     even while the indexer seals memtables and runs background merges.
     Call ``refresh()`` to pick up the indexer's latest published snapshot
     (documents added/deleted since the previous refresh become visible;
-    the compiled serve step is reused — only the host-side packing sees
-    the new postings)."""
+    the compiled serve steps are reused — only the host-side packing sees
+    the new postings).
+
+    Hot-path machinery (DESIGN.md §11):
+
+    * a ``PackedPostingCache`` memoizes the padded (g, lo, hi) rows of
+      each (f,s,t) key per (L, doc_shards) bucket, invalidated by
+      snapshot identity — warm drains copy rows instead of re-deriving
+      them from posting reads;
+    * batch sizes are padded to a power-of-two ladder
+      (``batch_size_bucket``), so each (B-bucket, L-bucket) pair hits one
+      compiled executable instead of silently recompiling at every new
+      queue length;
+    * ``compressed=True`` ships delta-coded device args
+      (``compress_qt1_batch`` -> ``make_qt1_serve_step_compressed``):
+      4 bytes/posting instead of 12, falling back per batch to the
+      6-byte offsets-only format when a 64-posting block's key span
+      overflows uint16."""
 
     def __init__(
         self,
@@ -57,70 +82,168 @@ class SearchServingEngine:
         max_batch: int = 64,
         top_k: int = 16,
         doc_shards: int = 1,
+        compressed: bool = False,
+        use_pack_cache: bool = True,
+        cache_entries: int = 4096,
+        cache_bytes: int = 256 << 20,
     ):
         self._source = index if hasattr(index, "snapshot") else None
         self.index = index.snapshot() if self._source is not None else index
+        if compressed and getattr(self.index, "max_distance", 0) > 254:
+            # both compressed formats carry fragment bounds as uint8
+            # offsets from the anchor; beyond 254 they would silently clip
+            raise ValueError(
+                "compressed serving requires max_distance <= 254 "
+                f"(got {self.index.max_distance})"
+            )
         self.mesh = mesh
         self.buckets = tuple(sorted(buckets))
         self.max_batch = max_batch
+        self.top_k = top_k
         self.doc_shards = doc_shards
-        self.step = make_qt1_serve_step(mesh, top_k=top_k)
+        self.compressed = compressed
+        self.pack_cache = (
+            PackedPostingCache(max_entries=cache_entries, max_bytes=cache_bytes)
+            if use_pack_cache
+            else None
+        )
+        # compiled steps, one per payload format; jit caches per (B, L)
+        # shape under each, and batch_size_bucket bounds how many shapes
+        # each one ever sees
+        self._steps: dict[str, object] = {}
         self._queue: list[SearchRequest] = []
+        self._queue_lock = threading.Lock()
+        # per-snapshot lemma ids -> L; validity is tied to the *pinned
+        # view's identity* (not to refresh() clearing it: a drain racing a
+        # refresh could otherwise re-insert a stale entry after the
+        # clear). Bounded: a high-cardinality query stream over a static
+        # index never refreshes, so the memo is cleared wholesale at the
+        # cap (rebuilding an entry is one n_postings scan)
+        self._bucket_memo: dict[tuple, int] = {}
+        self._bucket_memo_view = None
+        self._bucket_memo_cap = 65536
+        # delta-format eligibility is static per bucket (block/shard
+        # alignment); it also goes sticky-False after a uint16 span
+        # overflow so persistent-overflow corpora don't pay a failed
+        # delta encoding on every batch
+        self._delta_ok = {b: b % (64 * doc_shards) == 0 for b in self.buckets}
         self.stats = {"batches": 0, "requests": 0, "refreshes": 0,
-                      "bucket_hist": {b: 0 for b in self.buckets}}
+                      "compressed_batches": 0, "offset_fallbacks": 0,
+                      "bucket_hist": {b: 0 for b in self.buckets},
+                      "pack_cache": {}}
+
+    def _step(self, kind: str):
+        step = self._steps.get(kind)
+        if step is None:
+            if kind == "base":
+                step = make_qt1_serve_step(self.mesh, top_k=self.top_k)
+            else:  # "delta" / "offsets"
+                step = make_qt1_serve_step_compressed(
+                    self.mesh, top_k=self.top_k, delta_g=(kind == "delta")
+                )
+            self._steps[kind] = step
+        return step
 
     def refresh(self) -> None:
         """Swap in the indexer's latest published snapshot (no-op for a
-        static ProximityIndex)."""
+        static ProximityIndex). Bucket memoization is dropped here; the
+        pack cache invalidates itself on the first lookup against the new
+        snapshot (its entries are keyed by snapshot identity)."""
         if self._source is not None:
             self.index = self._source.snapshot()
             self.stats["refreshes"] += 1
 
     def _bucket_for(self, index, lemma_ids) -> int:
+        if index is not self._bucket_memo_view:
+            self._bucket_memo = {}
+            self._bucket_memo_view = index
+        memo_key = tuple(lemma_ids)
+        b = self._bucket_memo.get(memo_key)
+        if b is not None:
+            return b
         _, keys = select_fst_keys(list(lemma_ids))
         longest = 0
         for key in keys:
             if index.fst is not None and key in index.fst:
                 longest = max(longest, index.fst.n_postings(key))
-        for b in self.buckets:
-            if longest <= b:
-                return b
-        return self.buckets[-1]
+        b = self.buckets[-1]
+        for cand in self.buckets:
+            if longest <= cand:
+                b = cand
+                break
+        if len(self._bucket_memo) >= self._bucket_memo_cap:
+            self._bucket_memo.clear()
+        self._bucket_memo[memo_key] = b
+        return b
 
     def submit(self, lemma_ids) -> None:
-        self._queue.append(SearchRequest(list(lemma_ids)))
+        req = SearchRequest(list(lemma_ids))
+        with self._queue_lock:
+            self._queue.append(req)
 
     def drain(self) -> list[SearchResponse]:
-        """Serve everything queued, one batch per bucket. The snapshot is
-        pinned once for the whole drain."""
-        out = []
+        """Serve everything queued. The snapshot is pinned once for the
+        whole drain; each request's bucket is computed once (memoized per
+        lemma-id tuple per snapshot), the queue is consumed in one pass,
+        and each bucket group is served in max_batch-sized chunks,
+        largest group first."""
+        out: list[SearchResponse] = []
+        if not self._queue:
+            return out
         index = self.index
-        while self._queue:
-            # group by bucket; serve the largest group first
-            by_bucket: dict[int, list[SearchRequest]] = {}
-            for r in self._queue:
-                by_bucket.setdefault(self._bucket_for(index, r.lemma_ids), []).append(r)
-            bucket, reqs = max(by_bucket.items(), key=lambda kv: len(kv[1]))
-            reqs = reqs[: self.max_batch]
-            for r in reqs:
-                self._queue.remove(r)
-            t0 = time.perf_counter()
-            batch = pack_qt1_batch(
-                index, [r.lemma_ids for r in reqs], L=bucket, K=2,
-                doc_shards=self.doc_shards,
-            )
-            outs = self.step(*batch.device_args())
-            decoded = decode_results(batch, *outs)
-            dt = time.perf_counter() - t0
-            self.stats["batches"] += 1
-            self.stats["requests"] += len(reqs)
-            self.stats["bucket_hist"][bucket] += 1
-            for i in range(len(reqs)):
-                out.append(
-                    SearchResponse(results=decoded[i], latency_s=dt, bucket=bucket,
-                                   batch_size=len(reqs))
-                )
+        # swap the queue out under the submit lock BEFORE grouping: a
+        # submit() racing this drain either lands before the swap (and is
+        # served now) or after it (and stays queued) — never silently
+        # dropped into the already-grouped list
+        with self._queue_lock:
+            pending, self._queue = self._queue, []
+        by_bucket: dict[int, list[SearchRequest]] = {}
+        for r in pending:
+            by_bucket.setdefault(self._bucket_for(index, r.lemma_ids), []).append(r)
+        for bucket, reqs in sorted(by_bucket.items(), key=lambda kv: -len(kv[1])):
+            for lo in range(0, len(reqs), self.max_batch):
+                self._serve_batch(index, bucket, reqs[lo : lo + self.max_batch], out)
         return out
+
+    def _serve_batch(self, index, bucket, reqs, out) -> None:
+        t0 = time.perf_counter()
+        B_pad = batch_size_bucket(len(reqs), self.max_batch)
+        queries = [r.lemma_ids for r in reqs] + [[]] * (B_pad - len(reqs))
+        batch = pack_qt1_batch(
+            index, queries, L=bucket, K=2,
+            doc_shards=self.doc_shards, cache=self.pack_cache,
+        )
+        if self.compressed:
+            # delta blocks are 64 postings wide and must not straddle the
+            # L // doc_shards shard segments (the compressed step shards
+            # the per-block base over the model axis): _delta_ok holds the
+            # static verdict, and goes False on first uint16 span overflow
+            kind = "offsets"
+            if self._delta_ok.get(bucket, False):
+                try:
+                    args = compress_qt1_batch(batch, delta_g=True)
+                    kind = "delta"
+                except ValueError:  # in-block key span overflows uint16
+                    self._delta_ok[bucket] = False
+            if kind == "offsets":
+                args = compress_qt1_batch(batch, delta_g=False)
+                self.stats["offset_fallbacks"] += 1
+            self.stats["compressed_batches"] += 1
+            outs = self._step(kind)(*args)
+        else:
+            outs = self._step("base")(*batch.device_args())
+        decoded = decode_results(batch, *outs)
+        dt = time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(reqs)
+        self.stats["bucket_hist"][bucket] += 1
+        if self.pack_cache is not None:
+            self.stats["pack_cache"] = self.pack_cache.stats
+        for i in range(len(reqs)):
+            out.append(
+                SearchResponse(results=decoded[i], latency_s=dt, bucket=bucket,
+                               batch_size=len(reqs))
+            )
 
 
 class LMContinuousBatcher:

@@ -1,0 +1,153 @@
+"""Packed-posting serve cache (DESIGN.md §11).
+
+The paper's premise is that *frequently occurring* words dominate the
+query stream — which makes the serve path's host-side packing worst
+exactly where traffic is hottest: every drain re-read and re-padded the
+postings of the same few stop-word keys. ``PackedPostingCache`` memoizes
+the fully padded, range-partitioned ``(g, lo, hi)`` device rows that
+``pack_fst_key_rows`` derives for one (f,s,t) key at one (L, doc_shards)
+bucket, so packing a batch degenerates to B*K row copies.
+
+Invalidation rule: entries are valid only for the snapshot they were
+packed against. The cache tracks a single current ``snapshot_token``
+(``repro.index.segmented.snapshot_token``: a process-unique id minted per
+``SegmentedView``, or ``id()`` of a static immutable ``ProximityIndex``);
+the first lookup against a *different* snapshot clears everything — so
+``SegmentedIndex.refresh()`` invalidates naturally, and a stale row can
+never be served (the token is part of admission, not of the entry key).
+
+Bounded by both an entry count and a byte budget (LRU eviction); hits,
+misses, evictions, invalidations and resident bytes are surfaced via
+``.stats`` and re-exported in ``SearchServingEngine.stats``.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.jax_search import pack_fst_key_rows
+from repro.index.segmented import snapshot_token
+from repro.kernels.common import SENTINEL
+
+
+class PackedPostingCache:
+    """LRU cache of padded (g, lo, hi, present) rows for one snapshot."""
+
+    def __init__(self, max_entries: int = 4096, max_bytes: int = 256 << 20):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self._entries: OrderedDict = OrderedDict()  # positive: ck -> (rows, nbytes)
+        self._absent: OrderedDict = OrderedDict()  # negative: ck -> rows
+        self._token = None
+        self._token_ref = None  # keeps the token's index alive (id() reuse)
+        self._bytes = 0
+        self._sentinel_rows: dict = {}  # L -> shared all-SENTINEL row
+        self._lock = threading.Lock()
+        self._counts = {"hits": 0, "misses": 0, "evictions": 0, "invalidations": 0}
+
+    # -- lookups ----------------------------------------------------------
+    def get_rows(self, index, key, L: int, doc_shards: int = 1, stride: int | None = None):
+        """Rows for `key` at bucket (L, doc_shards), packed against
+        `index`'s current snapshot. Same contract as
+        ``pack_fst_key_rows``: three (L,) int32 arrays (read-only — they
+        are shared across batches, and alias one SENTINEL row when the
+        key is absent) plus a present flag. `stride` (snapshot-constant)
+        avoids an O(n_docs) re-derivation per miss when the caller
+        already has it."""
+        # pin the immutable snapshot FIRST: given a mutable SegmentedIndex,
+        # token and row derivation must see the same view even if a
+        # refresh() publishes a new one mid-derivation
+        if hasattr(index, "snapshot"):
+            index = index.snapshot()
+        tok = snapshot_token(index)
+        ck = (key, L, doc_shards)
+        with self._lock:
+            if tok != self._token:
+                if self._entries or self._absent:
+                    self._counts["invalidations"] += 1
+                self._entries.clear()
+                self._absent.clear()
+                self._bytes = 0
+                self._token = tok
+                # pin the token's index: for static indexes the token is
+                # id(), which must not be freed and reused while entries
+                # keyed under it are resident
+                self._token_ref = index
+            ent = self._entries.get(ck)
+            if ent is not None:
+                self._entries.move_to_end(ck)
+                self._counts["hits"] += 1
+                return ent[0]
+            neg = self._absent.get(ck)
+            if neg is not None:
+                self._absent.move_to_end(ck)
+                self._counts["hits"] += 1
+                return neg
+            self._counts["misses"] += 1
+        # derive outside the lock: merged segment reads can be slow and
+        # must not serialize concurrent serving threads
+        g, lo, hi, present = pack_fst_key_rows(index, key, L, doc_shards, stride)
+        if not present:
+            # negative entry: callers never read non-present rows, so all
+            # three alias one shared per-L SENTINEL row (0 bytes) and live
+            # in a separate LRU — a stream of distinct absent keys must
+            # not evict genuinely hot positive rows
+            rows = (self._shared_sentinel(L),) * 3 + (False,)
+            with self._lock:
+                if tok != self._token:
+                    return rows  # a refresh raced the derivation: don't admit
+                self._absent[ck] = rows
+                while len(self._absent) > self.max_entries:
+                    self._absent.popitem(last=False)
+                    self._counts["evictions"] += 1
+            return rows
+        for a in (g, lo, hi):
+            a.setflags(write=False)
+        nbytes = g.nbytes + lo.nbytes + hi.nbytes
+        rows = (g, lo, hi, present)
+        with self._lock:
+            if tok != self._token:
+                return rows  # a refresh raced the derivation: don't admit
+            if ck not in self._entries:
+                self._entries[ck] = (rows, nbytes)
+                self._bytes += nbytes
+                while len(self._entries) > self.max_entries or (
+                    self._bytes > self.max_bytes and len(self._entries) > 1
+                ):
+                    _, (_, nb) = self._entries.popitem(last=False)
+                    self._bytes -= nb
+                    self._counts["evictions"] += 1
+        return rows
+
+    def _shared_sentinel(self, L: int):
+        row = self._sentinel_rows.get(L)
+        if row is None:
+            row = np.full(L, SENTINEL, np.int32)
+            row.setflags(write=False)
+            self._sentinel_rows[L] = row
+        return row
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            c = dict(self._counts)
+            c["entries"] = len(self._entries)
+            c["negative_entries"] = len(self._absent)
+            c["bytes"] = self._bytes
+        total = c["hits"] + c["misses"]
+        c["hit_rate"] = c["hits"] / total if total else 0.0
+        return c
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._absent.clear()
+            self._bytes = 0
+            self._token = None
+            self._token_ref = None

@@ -1,0 +1,258 @@
+"""Packed-posting serve cache + compressed serving pipeline (DESIGN.md §11):
+cache-backed packing must be byte-identical to direct packing, warm and
+cold drains must agree, the compressed engine must match the uncompressed
+one over static and segmented (post-compaction) snapshots, and a
+refresh() must invalidate cached rows (stale-cache regression).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.jax_search import (
+    QT1Batch,
+    batch_size_bucket,
+    decode_results,
+    pack_fst_key_rows,
+    pack_qt1_batch,
+)
+from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.index import SegmentedIndex, snapshot_token
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import SearchServingEngine
+from repro.serving.pack_cache import PackedPostingCache
+
+D = 5
+BUCKETS = (256, 1024)
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=80, mean_doc_len=70, vocab_size=500, seed=11)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    idx = build_index(table, lex, max_distance=D)
+    queries = sample_stop_queries(table, lex, 10, window=5, seed=4)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return table, lex, idx, queries, mesh
+
+
+def _sig(responses):
+    return [
+        sorted(zip(r.results["doc"].tolist(), r.results["start"].tolist(),
+                   r.results["end"].tolist(),
+                   np.round(r.results["score"], 5).tolist()))
+        for r in responses
+    ]
+
+
+def _drain(eng, queries):
+    for q in queries:
+        eng.submit(q)
+    resp = eng.drain()
+    assert len(resp) == len(queries)
+    return _sig(resp)
+
+
+# -- packing ---------------------------------------------------------------
+def test_pack_cached_equals_uncached(world):
+    table, lex, idx, queries, mesh = world
+    cache = PackedPostingCache()
+    for _ in range(2):  # second pass: all rows come from the cache
+        a = pack_qt1_batch(idx, queries, L=1024, K=2)
+        b = pack_qt1_batch(idx, queries, L=1024, K=2, cache=cache)
+        for f in ("key_g", "key_lo", "key_hi", "idf_sum", "span_adjust"):
+            assert np.array_equal(getattr(a, f), getattr(b, f)), f
+        assert a.stride == b.stride
+    assert cache.stats["hits"] > 0
+
+
+def test_cache_lru_and_stats(world):
+    table, lex, idx, queries, mesh = world
+    keys = [k for k in idx.fst.keys()][:6]
+    cache = PackedPostingCache(max_entries=4)
+    for key in keys:
+        cache.get_rows(idx, key, 256, 1)
+    st = cache.stats
+    assert st["misses"] == 6 and st["entries"] == 4 and st["evictions"] == 2
+    assert st["bytes"] == 4 * 3 * 256 * 4  # entries * rows * L * int32
+    # evicted keys miss again; resident keys hit
+    cache.get_rows(idx, keys[-1], 256, 1)
+    assert cache.stats["hits"] == 1
+    cache.get_rows(idx, keys[0], 256, 1)
+    assert cache.stats["misses"] == 7
+
+
+def test_cache_rows_match_direct_derivation(world):
+    table, lex, idx, queries, mesh = world
+    cache = PackedPostingCache()
+    key = next(iter(idx.fst.keys()))
+    g, lo, hi, present = cache.get_rows(idx, key, 512, 1)
+    dg, dlo, dhi, dpresent = pack_fst_key_rows(idx, key, 512, 1)
+    assert present == dpresent
+    assert np.array_equal(g, dg) and np.array_equal(lo, dlo) and np.array_equal(hi, dhi)
+    assert not g.flags.writeable  # shared rows must be immutable
+    missing = (10**6, 10**6 + 1, 10**6 + 2)
+    bytes_before = cache.stats["bytes"]
+    mg, mlo, mhi, present = cache.get_rows(idx, missing, 512, 1)
+    assert not present
+    # negative entries share one SENTINEL row and must cost 0 bytes
+    assert mg is mlo is mhi
+    assert cache.stats["bytes"] == bytes_before
+    assert cache.get_rows(idx, missing, 512, 1)[3] is False  # cached hit
+    assert cache.stats["hits"] == 1
+    assert cache.stats["negative_entries"] == 1
+
+
+def test_absent_key_churn_does_not_evict_hot_rows(world):
+    """Negative entries live in their own LRU: a stream of distinct
+    absent keys must not displace cached positive rows."""
+    table, lex, idx, queries, mesh = world
+    cache = PackedPostingCache(max_entries=4)
+    hot = [k for k in idx.fst.keys()][:3]
+    for key in hot:
+        cache.get_rows(idx, key, 256, 1)
+    for i in range(20):  # 20 distinct absent keys
+        cache.get_rows(idx, (10**6 + i, 1, 2), 256, 1)
+    st0 = cache.stats
+    for key in hot:  # all still resident
+        cache.get_rows(idx, key, 256, 1)
+    st = cache.stats
+    assert st["hits"] == st0["hits"] + 3
+    assert st["entries"] == 3 and st["negative_entries"] == 4
+
+
+def test_cache_invalidates_on_refresh():
+    table, lex = generate_corpus(n_docs=40, mean_doc_len=50, vocab_size=300, seed=7)
+    lex.sw_count = 10
+    lex.fu_count = 20
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=16)
+    docs = table.to_doc_lists()
+    for d in docs[:20]:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    cache = PackedPostingCache()
+    key = next(iter(v1.fst.keys()))
+    g1, _, _, _ = cache.get_rows(v1, key, 256, 1)
+    assert cache.get_rows(v1, key, 256, 1)[0] is g1  # hit
+    for d in docs[20:]:
+        seg.add_document(d)
+    v2 = seg.refresh()
+    assert snapshot_token(v2) != snapshot_token(v1)
+    g2, _, _, _ = cache.get_rows(v2, key, 256, 1)
+    assert cache.stats["invalidations"] == 1
+    # the new snapshot has more postings for the key: rows must differ
+    assert not np.array_equal(g1, g2)
+
+
+# -- engine ----------------------------------------------------------------
+def test_engine_warm_equals_cold_and_uncached(world):
+    table, lex, idx, queries, mesh = world
+    eng = SearchServingEngine(idx, mesh, buckets=BUCKETS, max_batch=8, top_k=16)
+    plain = SearchServingEngine(
+        idx, mesh, buckets=BUCKETS, max_batch=8, top_k=16, use_pack_cache=False
+    )
+    cold = _drain(eng, queries)
+    warm = _drain(eng, queries)
+    baseline = _drain(plain, queries)
+    assert cold == warm == baseline
+    assert eng.stats["pack_cache"]["hits"] > 0
+    assert plain.pack_cache is None
+
+
+@pytest.mark.parametrize("source", ["static", "segmented"])
+def test_compressed_engine_matches_uncompressed(world, source):
+    table, lex, idx, queries, mesh = world
+    if source == "segmented":
+        seg = SegmentedIndex(lex, max_distance=D, memtable_docs=16)
+        for d in table.to_doc_lists():
+            seg.add_document(d)
+        seg.refresh()
+        index = seg
+    else:
+        index = idx
+    base = SearchServingEngine(index, mesh, buckets=BUCKETS, max_batch=8, top_k=16)
+    comp = SearchServingEngine(
+        index, mesh, buckets=BUCKETS, max_batch=8, top_k=16, compressed=True
+    )
+    assert _drain(base, queries) == _drain(comp, queries)
+    assert comp.stats["compressed_batches"] > 0
+
+
+def test_compressed_after_delete_compact_and_refresh(world):
+    """Stale-cache regression: serve, mutate (delete + major compaction),
+    refresh — both engines must agree and never serve the deleted doc or
+    any stale cached rows."""
+    table, lex, idx, queries, mesh = world
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=16)
+    for d in table.to_doc_lists():
+        seg.add_document(d)
+    seg.refresh()
+    base = SearchServingEngine(seg, mesh, buckets=BUCKETS, max_batch=8, top_k=16)
+    comp = SearchServingEngine(
+        seg, mesh, buckets=BUCKETS, max_batch=8, top_k=16, compressed=True
+    )
+    first = _drain(base, queries)
+    assert first == _drain(comp, queries)
+    victim = None
+    for resp in first:
+        if resp:
+            victim = int(resp[0][0])
+            break
+    assert victim is not None
+    seg.delete_document(victim)
+    seg.compact(force=True)
+    seg.refresh()
+    base.refresh()
+    comp.refresh()
+    after_base = _drain(base, queries)
+    assert after_base == _drain(comp, queries)
+    assert after_base != first  # the deletion is visible through the cache
+    served = {doc for resp in after_base for doc, _, _, _ in resp}
+    assert victim not in served
+    assert base.stats["pack_cache"]["invalidations"] >= 1
+    # equivalence against a from-scratch engine over the same snapshot:
+    # cached rows match a cache that never saw the old snapshot
+    fresh = SearchServingEngine(seg, mesh, buckets=BUCKETS, max_batch=8, top_k=16)
+    assert after_base == _drain(fresh, queries)
+
+
+def test_batch_shape_bucketing(world):
+    table, lex, idx, queries, mesh = world
+    assert [batch_size_bucket(n, 64) for n in (1, 2, 3, 5, 9, 64)] == [
+        1, 2, 4, 8, 16, 64]
+    assert batch_size_bucket(7, 4) == 4  # capped
+    eng = SearchServingEngine(idx, mesh, buckets=(1024,), max_batch=8, top_k=16)
+    got = _drain(eng, queries[:3])  # padded to B=4: 3 real + 1 padding slot
+    ref = _drain(eng, queries[:3])
+    assert got == ref and len(got) == 3
+
+
+def test_drain_single_pass_grouping(world):
+    """All queued requests are served in one pass: per-bucket groups are
+    chunked by max_batch, no request is dropped or served twice."""
+    table, lex, idx, queries, mesh = world
+    eng = SearchServingEngine(idx, mesh, buckets=BUCKETS, max_batch=4, top_k=16)
+    many = (queries * 3)[:12]
+    for q in many:
+        eng.submit(q)
+    resp = eng.drain()
+    assert len(resp) == 12
+    assert eng.stats["requests"] == 12
+    assert eng.stats["batches"] >= 3
+    assert not eng._queue
+
+
+def test_decode_results_skips_masked_rows():
+    stride = 100
+    s = np.array([[5.0, 4.0, -1e30], [-1e30] * 3, [7.0, -1e30, -1e30]], np.float32)
+    g = np.array([[205, 310, 0], [0] * 3, [499, 0, 0]], np.int32)
+    lo = np.array([[203, 309, 0], [0] * 3, [495, 0, 0]], np.int32)
+    hi = np.array([[207, 312, 0], [0] * 3, [499, 0, 0]], np.int32)
+    batch = QT1Batch(None, None, None, None, None, stride)
+    out = decode_results(batch, s, g, lo, hi)
+    assert [o["doc"].tolist() for o in out] == [[2, 3], [], [4]]
+    assert out[0]["start"].tolist() == [3, 9]
+    assert out[0]["end"].tolist() == [7, 12]
+    assert out[2]["score"].tolist() == [7.0]
+    assert out[1]["doc"].size == 0
