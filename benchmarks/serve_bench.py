@@ -1,7 +1,9 @@
-"""Serve-path benchmarks: compiled QT1 step latency per bucket (the
-response-time guarantee, DESIGN.md §3) plus the host hot path around it
-(DESIGN.md §11) — packed-posting-cache cold vs warm packing, and engine
-drains uncompressed vs warm-cache vs compressed.
+"""Serve-path benchmarks: compiled QT1/QT2/QT5 step latency per bucket
+(the response-time guarantee, DESIGN.md §3/§12) plus the host hot path
+around it (DESIGN.md §11) — packed-posting-cache cold vs warm packing,
+engine drains uncompressed vs warm-cache vs compressed (re-encode-per-
+drain vs per-key compressed-row cache), and mixed-type drains through
+the query-type dispatch.
 
 ``run()`` returns ``(rows, report)``: CSV rows for the harness and a
 nested dict that ``benchmarks/run.py --json`` writes to BENCH_serve.json
@@ -13,34 +15,42 @@ from __future__ import annotations
 import time
 
 import jax
+import numpy as np
 
 from repro.core.index_builder import build_index
 from repro.core.jax_search import make_qt1_serve_step, pack_qt1_batch
-from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.data.corpus import (
+    generate_corpus,
+    sample_mixed_queries,
+    sample_stop_queries,
+    sample_typed_queries,
+)
 from repro.launch.mesh import make_mesh
 from repro.serving.engine import SearchServingEngine
 from repro.serving.pack_cache import PackedPostingCache
 
 
 def _measure_drains(variants, queries, rounds: int) -> dict:
-    """Mean per-drain latency per variant, measured *interleaved*: one
+    """Median per-drain latency per variant, measured *interleaved*: one
     drain of each engine per round, so slow system drift over the
     measurement window is shared by all variants instead of being
-    attributed to whichever ran last. One unmeasured warmup drain each
-    (jit compile + cache fill are reported separately)."""
+    attributed to whichever ran last (the median additionally discards
+    GC/scheduler outliers, which on a small CPU box can exceed the
+    host-side effect under measurement). One unmeasured warmup drain
+    each (jit compile + cache fill are reported separately)."""
     for _, eng in variants:
         for q in queries:
             eng.submit(q)
         eng.drain()
-    totals = {name: 0.0 for name, _ in variants}
+    samples = {name: [] for name, _ in variants}
     for _ in range(rounds):
         for name, eng in variants:
             for q in queries:
                 eng.submit(q)
             t0 = time.perf_counter()
             eng.drain()
-            totals[name] += time.perf_counter() - t0
-    return {name: t / rounds * 1e6 for name, t in totals.items()}
+            samples[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(t)) * 1e6 for name, t in samples.items()}
 
 
 def run(smoke: bool = False):
@@ -108,13 +118,17 @@ def run(smoke: bool = False):
     ))
 
     # -- engine drains: seed path vs warm cache vs compressed --------------
+    # "compressed" is PR 2's re-encode-per-drain path (delta encoding runs
+    # on every batch even at 100% pack-cache hit rate); "compressed_cached"
+    # adds the per-key compressed-row cache (DESIGN.md §12)
     mk = lambda **kw: SearchServingEngine(  # noqa: E731
         idx, mesh, buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw
     )
     variants = (
         ("uncached", mk(use_pack_cache=False)),
         ("cached", mk()),
-        ("compressed", mk(compressed=True)),
+        ("compressed", mk(compressed=True, use_compressed_cache=False)),
+        ("compressed_cached", mk(compressed=True)),
     )
     lat = _measure_drains(variants, qs, rounds)
     for name, eng in variants:
@@ -127,9 +141,109 @@ def run(smoke: bool = False):
         if eng.compressed:
             d["offset_fallbacks"] = eng.stats["offset_fallbacks"]
             derived += f";offset_fallbacks={d['offset_fallbacks']}"
+        if eng.compressed_cache is not None:
+            d["compressed_cache_hit_rate"] = eng.compressed_cache.stats["hit_rate"]
+            derived += f";ccache_hit_rate={d['compressed_cache_hit_rate']:.3f}"
         rows.append((f"serve/drain_{name}_B{eng_B}_L{eng_L}", us, derived))
     rep["drain"]["warm_vs_uncached_speedup"] = (
         rep["drain"]["uncached"]["us"] / rep["drain"]["cached"]["us"]
+    )
+    rep["drain"]["compressed_cache_speedup_offsets_regime"] = (
+        rep["drain"]["compressed"]["us"] / rep["drain"]["compressed_cached"]["us"]
+    )
+
+    # -- compressed-row cache in the delta16 regime ------------------------
+    # The quick corpus's g-range overflows uint16, so its compressed
+    # drains above exercise the *offsets fallback* (cheap re-encode). The
+    # headline format is delta16 — its per-drain re-encode is the costly
+    # one the compressed-row cache eliminates — so the acceptance metric
+    # is measured on a corpus whose g-range fits uint16 blocks. Shapes
+    # (B, K, L) are identical: bucket padding makes step and encode cost
+    # shape-bound, not corpus-bound.
+    if smoke:
+        didx, dqs = idx, qs  # the smoke corpus is already delta-friendly
+    else:
+        dtable, dlex = generate_corpus(
+            n_docs=300, mean_doc_len=150, vocab_size=20_000, seed=3
+        )
+        didx = build_index(dtable, dlex, max_distance=5)
+        dq = sample_stop_queries(dtable, dlex, n_q, window=3, seed=5)
+        dqs = (dq * ((eng_B // len(dq)) + 1))[:eng_B]
+    mkd = lambda **kw: SearchServingEngine(  # noqa: E731
+        didx, mesh, buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw
+    )
+    dvariants = (
+        ("compressed_reencode", mkd(compressed=True, use_compressed_cache=False)),
+        ("compressed_cached", mkd(compressed=True)),
+    )
+    dlat = _measure_drains(dvariants, dqs, rounds)
+    rep["drain"]["delta_regime"] = {
+        name: {"us": dlat[name], "per_query_us": dlat[name] / eng_B}
+        for name, _ in dvariants
+    }
+    rep["drain"]["delta_regime"]["offset_fallbacks"] = (
+        dvariants[1][1].stats["offset_fallbacks"]
+    )
+    rep["drain"]["compressed_cache_speedup"] = (
+        dlat["compressed_reencode"] / dlat["compressed_cached"]
+    )
+    for name, _ in dvariants:
+        rows.append((
+            f"serve/drain_delta_{name}_B{eng_B}_L{eng_L}", dlat[name],
+            f"per_query_us={dlat[name] / eng_B:.1f}",
+        ))
+
+    # -- typed + mixed drains through the query-type dispatch --------------
+    typed = {
+        "qt2": sample_typed_queries(table, lex, n_q, "qt2", window=3, seed=6),
+        "qt5": sample_typed_queries(table, lex, n_q, "qt5", window=3, seed=7),
+    }
+    rep["drain_typed"] = {}
+    for tname, tqs in typed.items():
+        tqs = (tqs * ((eng_B // max(len(tqs), 1)) + 1))[:eng_B] if tqs else tqs
+        if not tqs:
+            continue
+        for cname, eng in (("", mk()), ("_compressed", mk(compressed=True))):
+            for q in tqs:  # jit + cache warmup
+                eng.submit(q)
+            eng.drain()
+            lats = {"cold": 0.0, "warm": 0.0}
+            for _ in range(rounds):  # cold = jit-warm, cache-cold
+                for c in (eng.pack_cache, eng.compressed_cache):
+                    if c is not None:
+                        c.clear()
+                for phase in ("cold", "warm"):
+                    for q in tqs:
+                        eng.submit(q)
+                    t0 = time.perf_counter()
+                    eng.drain()
+                    lats[phase] += time.perf_counter() - t0
+            lats = {k: v / rounds * 1e6 for k, v in lats.items()}
+            rep["drain_typed"][f"{tname}{cname}"] = lats
+            for phase, us in lats.items():
+                rows.append((
+                    f"serve/drain_{tname}{cname}_{phase}_B{len(tqs)}_L{eng_L}",
+                    us, f"per_query_us={us / len(tqs):.1f}",
+                ))
+
+    mixed = sample_mixed_queries(table, lex, eng_B, window=3, seed=8)
+    mvariants = (
+        ("mixed_uncached", mk(use_pack_cache=False)),
+        ("mixed_cached", mk()),
+        ("mixed_compressed_reencode", mk(compressed=True, use_compressed_cache=False)),
+        ("mixed_compressed_cached", mk(compressed=True)),
+    )
+    mlat = _measure_drains(mvariants, mixed, rounds)
+    rep["drain_mixed"] = {}
+    for name, eng in mvariants:
+        us = mlat[name]
+        d = rep["drain_mixed"][name] = {"us": us, "per_query_us": us / len(mixed)}
+        derived = f"per_query_us={us / len(mixed):.1f}"
+        d["paths"] = dict(eng.stats["paths"])
+        rows.append((f"serve/drain_{name}_B{len(mixed)}_L{eng_L}", us, derived))
+    rep["drain_mixed"]["compressed_cache_speedup"] = (
+        rep["drain_mixed"]["mixed_compressed_reencode"]["us"]
+        / rep["drain_mixed"]["mixed_compressed_cached"]["us"]
     )
     return rows, rep
 

@@ -13,7 +13,7 @@ import time
 import numpy as np
 
 from repro.core.index_builder import build_index
-from repro.data.corpus import generate_corpus, sample_stop_queries
+from repro.data.corpus import generate_corpus, sample_mixed_queries, sample_stop_queries
 from repro.launch.mesh import make_mesh
 from repro.serving.engine import SearchServingEngine
 
@@ -24,7 +24,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--max-distance", type=int, default=5)
     ap.add_argument("--compressed", action="store_true",
-                    help="serve the delta-coded posting payload (DESIGN.md §11)")
+                    help="serve the delta-coded posting payload (DESIGN.md §11-§12)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed QT1/QT2/QT5 traffic through the query-type "
+                         "dispatch instead of all-stop-word QT1 queries")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -39,7 +42,10 @@ def main() -> None:
     engine = SearchServingEngine(index, mesh, max_batch=64, top_k=8,
                                  compressed=args.compressed)
 
-    queries = sample_stop_queries(table, lex, args.requests, window=3, seed=2)
+    if args.mixed:
+        queries = sample_mixed_queries(table, lex, args.requests, window=3, seed=2)
+    else:
+        queries = sample_stop_queries(table, lex, args.requests, window=3, seed=2)
     for round_name in ("cold", "warm"):  # warm: packed rows come from cache
         for q in queries:
             engine.submit(q)
@@ -54,11 +60,12 @@ def main() -> None:
               f"p99={np.percentile(lat,99)*1000:.1f}ms")
         print(f"requests with hits: {n_hits}/{len(responses)}")
     print(f"bucket histogram: {engine.stats['bucket_hist']}")
-    print(f"batches: {engine.stats['batches']}")
+    print(f"batches: {engine.stats['batches']}  paths: {engine.stats['paths']}")
     print(f"pack cache: {engine.stats['pack_cache']}")
     if args.compressed:
         print(f"compressed batches: {engine.stats['compressed_batches']} "
               f"(offsets fallbacks: {engine.stats['offset_fallbacks']})")
+        print(f"compressed-row cache: {engine.stats['compressed_cache']}")
 
 
 if __name__ == "__main__":

@@ -120,6 +120,41 @@ def select_fst_keys(lemma_ids: list[int]) -> tuple[int, list[tuple[int, int, int
     return f, keys
 
 
+def qt5_plan(index, lemma_ids: list[int]):
+    """The QT5 decomposition shared by the CPU engine
+    (``search.ProximitySearchEngine._qt5``), the device packer
+    (``jax_search.pack_qt5_batch``) and the serving router — one copy so
+    the compiled and scalar paths cannot drift. Returns (anchor, others,
+    stops, counts): anchor = the rarest non-stop lemma (tie-break by
+    id); others = [(lemma, multiplicity), ...] ordinary-window
+    constraints, anchor first when its multiplicity > 1, then the
+    remaining non-stop lemmas ascending; stops = [(stop lemma,
+    multiplicity), ...] NSW constraints sorted by id; counts = live
+    posting counts of the non-stop lemmas. None for degenerate queries
+    (no stop or no non-stop lemma)."""
+    sw = index.lexicon.sw_count
+    ids = list(lemma_ids)
+    stop = [l for l in ids if l < sw]
+    nonstop = [l for l in ids if l >= sw]
+    if not nonstop or not stop:
+        return None
+    counts = {l: index.ordinary.n_postings(l) for l in set(nonstop)}
+    anchor = min(sorted(set(nonstop)), key=lambda l: (counts[l], l))
+    mult_ns: dict[int, int] = {}
+    for l in nonstop:
+        mult_ns[l] = mult_ns.get(l, 0) + 1
+    others = []
+    if mult_ns[anchor] > 1:
+        others.append((anchor, mult_ns[anchor]))
+    for l in sorted(set(nonstop)):
+        if l != anchor:
+            others.append((l, mult_ns[l]))
+    mult_st: dict[int, int] = {}
+    for l in stop:
+        mult_st[l] = mult_st.get(l, 0) + 1
+    return anchor, others, sorted(mult_st.items()), counts
+
+
 def select_wv_keys(lemma_ids: list[int]) -> list[tuple[int, int]]:
     """QT2 pair covering: sort ascending by FL, pair consecutive lemmas;
     odd count pairs the leftover with the most frequent lemma."""

@@ -39,6 +39,7 @@ from repro.core.query import (
     QueryType,
     SubQuery,
     build_subqueries,
+    qt5_plan,
     select_fst_keys,
     select_wv_keys,
 )
@@ -378,29 +379,28 @@ class ProximitySearchEngine(_BaseEngine):
     # ---------------- QT5: NSW records ------------------------------------
     def _qt5(self, sub: SubQuery, meter: ByteMeter) -> Matches:
         ids = sub.lemma_ids
-        sw = self.lex.sw_count
-        stop_ids = [l for l in ids if l < sw]
-        nonstop = [l for l in ids if l >= sw]
-        mult_stop = self._multiplicities(stop_ids)
         d = self.index.max_distance
-        # anchor on the rarest non-stop lemma (deterministic tie-break by id)
-        counts = {l: self.index.ordinary.n_postings(l) for l in set(nonstop)}
-        anchor = min(sorted(set(nonstop)), key=lambda l: (counts[l], l))
+        # anchor / constraint selection is shared with the compiled serve
+        # path (query.qt5_plan) so the two engines cannot drift: anchor =
+        # the rarest non-stop lemma (deterministic tie-break by id)
+        plan = qt5_plan(self.index, ids)
+        if plan is None:
+            return Matches()
+        anchor, other_plan, stops, _ = plan
         a_docs, a_pos = self.index.read_ordinary(anchor, meter)
         if a_docs.size == 0:
             return Matches()
         a_g = self._g(a_docs, a_pos)
         # other non-stop lemmas: ordinary window around the anchor
-        mult_ns = self._multiplicities(nonstop)
         others = []
-        if mult_ns[anchor] > 1:
-            others.append((a_g, mult_ns[anchor]))
-        for l in sorted(set(nonstop)):
-            if l != anchor:
-                docs, pos = self.index.read_ordinary(l, meter)
-                if docs.size == 0:
-                    return Matches()
-                others.append((self._g(docs, pos), mult_ns[l]))
+        for l, r in other_plan:
+            if l == anchor:
+                others.append((a_g, r))
+                continue
+            docs, pos = self.index.read_ordinary(l, meter)
+            if docs.size == 0:
+                return Matches()
+            others.append((self._g(docs, pos), r))
         ok = np.ones(a_g.size, bool)
         lo = a_g.copy()
         hi = a_g.copy()
@@ -414,7 +414,7 @@ class ProximitySearchEngine(_BaseEngine):
         rows, fls, offs = self.index.nsw.read(anchor, meter)
         keep = np.abs(offs) <= d
         rows, fls, offs = rows[keep], fls[keep], offs[keep]
-        for sid, r in mult_stop.items():
+        for sid, r in stops:
             sel = fls == sid
             r_rows = rows[sel]
             r_offs = offs[sel]

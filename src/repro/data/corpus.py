@@ -132,6 +132,88 @@ def generate_corpus(
     return table, lex
 
 
+def sample_typed_queries(
+    table: TokenTable,
+    lex: Lexicon,
+    n_queries: int,
+    qtype: str = "qt1",
+    min_len: int = 3,
+    max_len: int = 5,
+    window: int = 9,
+    seed: int = 0,
+) -> list[list[int]]:
+    """Sample queries of one QT class from real co-occurrence windows
+    (the query-log-derived shape of sample_stop_queries, generalized):
+
+    * ``"qt1"`` — all stop lemmas;
+    * ``"qt2"`` — all frequently used lemmas (the (w,v) serve path);
+    * ``"qt3"`` — all ordinary lemmas (served by the scalar engine);
+    * ``"qt5"`` — at least one stop lemma plus non-stop lemmas (the NSW
+      serve path)."""
+    rng = np.random.default_rng(seed)
+    sw = lex.sw_count
+    fu_hi = sw + lex.fu_count
+    preds = {
+        "qt1": lambda l: l < sw,
+        "qt2": lambda l: (l >= sw) & (l < fu_hi),
+        "qt3": lambda l: l >= fu_hi,
+    }
+    seed_pred = preds.get(qtype, lambda l: l < sw)  # qt5 seeds on stop rows
+    seed_rows = np.nonzero(seed_pred(table.lemma_ids))[0]
+    queries: list[list[int]] = []
+    guard = 0
+    while len(queries) < n_queries and guard < n_queries * 200 and seed_rows.size:
+        guard += 1
+        r = int(rng.choice(seed_rows))
+        d, p = int(table.doc_ids[r]), int(table.positions[r])
+        m = (table.doc_ids == d) & (np.abs(table.positions - p) <= window)
+        lems = table.lemma_ids[m]
+        L = int(rng.integers(min_len, max_len + 1))
+        if qtype == "qt5":
+            st = lems[lems < sw]
+            ns = lems[lems >= sw]
+            if st.size < 1 or ns.size < 1:
+                continue
+            k_st = int(rng.integers(1, min(L - 1, st.size) + 1))
+            k_ns = min(L - k_st, int(ns.size))
+            q = [int(x) for x in rng.choice(st, size=k_st, replace=False)]
+            q += [int(x) for x in rng.choice(ns, size=k_ns, replace=False)]
+        else:
+            pool = lems[preds[qtype](lems)]
+            if pool.size < min_len:
+                continue
+            take = rng.choice(pool.size, size=min(L, pool.size), replace=False)
+            q = [int(x) for x in pool[take]]
+        if len(q) >= min_len:
+            queries.append(q)
+    return queries
+
+
+def sample_mixed_queries(
+    table: TokenTable,
+    lex: Lexicon,
+    n_queries: int,
+    kinds: tuple = ("qt1", "qt2", "qt5"),
+    min_len: int = 3,
+    max_len: int = 5,
+    window: int = 9,
+    seed: int = 0,
+) -> list[list[int]]:
+    """Round-robin interleave of per-type samples — the mixed-traffic
+    shape the serving engine's query-type dispatch is built for."""
+    per = -(-n_queries // len(kinds))
+    cols = [
+        sample_typed_queries(table, lex, per, k, min_len, max_len, window, seed + i)
+        for i, k in enumerate(kinds)
+    ]
+    out: list[list[int]] = []
+    for i in range(per):
+        for c in cols:
+            if i < len(c):
+                out.append(c[i])
+    return out[:n_queries]
+
+
 def sample_stop_queries(
     table: TokenTable,
     lex: Lexicon,

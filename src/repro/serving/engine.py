@@ -21,15 +21,33 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.jax_search import (
+    assemble_qt1_compressed,
+    assemble_qt2_compressed,
+    assemble_qt5_compressed,
     batch_size_bucket,
     compress_qt1_batch,
+    compress_qt2_batch,
+    compress_qt5_batch,
     decode_results,
     make_qt1_serve_step,
     make_qt1_serve_step_compressed,
+    make_wv_serve_step,
+    ordered_wv_keys,
     pack_qt1_batch,
+    pack_qt2_batch,
+    pack_qt5_batch,
+    qt5_plan,
 )
-from repro.core.query import select_fst_keys
+from repro.core.lexicon import UNKNOWN_FL
+from repro.core.query import QueryType, classify, select_fst_keys, select_wv_keys
 from repro.serving.pack_cache import PackedPostingCache
+
+_EMPTY_RESULT = {
+    "doc": np.zeros(0, np.int64),
+    "start": np.zeros(0, np.int64),
+    "end": np.zeros(0, np.int64),
+    "score": np.zeros(0, np.float32),
+}
 
 
 @dataclass
@@ -44,11 +62,12 @@ class SearchResponse:
     latency_s: float
     bucket: int
     batch_size: int
+    path: str = "qt1"
 
 
 class SearchServingEngine:
-    """Bucketed, batched QT1 serving over a ProximityIndex or a
-    snapshot-able incremental index (``repro.index.SegmentedIndex``).
+    """Bucketed, batched proximity-search serving over a ProximityIndex
+    or a snapshot-able incremental index (``repro.index.SegmentedIndex``).
 
     Serving always runs against an *immutable* searcher snapshot: a drain
     pins the snapshot once, so in-flight batches see a consistent view
@@ -58,21 +77,33 @@ class SearchServingEngine:
     the compiled serve steps are reused — only the host-side packing sees
     the new postings).
 
-    Hot-path machinery (DESIGN.md §11):
+    Query-type dispatch (DESIGN.md §12): a single drain routes each
+    request by its lemma classes — QT1 to the (f,s,t) serve step, QT2 to
+    the (w,v) interval-join step, QT5 to the NSW step — grouped per
+    (path, L-bucket) and padded to the power-of-two batch ladder, so the
+    response-time guarantee is uniform across query types instead of
+    fast-for-QT1-only. QT3/QT4 (ordinary-index scans without additional
+    keys) and degenerate shapes (short/overlong queries, key counts
+    beyond the static K, multiplicities beyond r_max) take the scalar
+    CPU engine; responses come back in submission order.
 
-    * a ``PackedPostingCache`` memoizes the padded (g, lo, hi) rows of
-      each (f,s,t) key per (L, doc_shards) bucket, invalidated by
-      snapshot identity — warm drains copy rows instead of re-deriving
+    Hot-path machinery (DESIGN.md §11-§12):
+
+    * a ``PackedPostingCache`` memoizes the padded device rows of each
+      (f,s,t) / (w,v) / ordinary / NSW key per (L, doc_shards) bucket,
+      invalidated by snapshot identity (add-only refreshes retain
+      untouched keys) — warm drains copy rows instead of re-deriving
       them from posting reads;
     * batch sizes are padded to a power-of-two ladder
-      (``batch_size_bucket``), so each (B-bucket, L-bucket) pair hits one
-      compiled executable instead of silently recompiling at every new
-      queue length;
-    * ``compressed=True`` ships delta-coded device args
-      (``compress_qt1_batch`` -> ``make_qt1_serve_step_compressed``):
-      4 bytes/posting instead of 12, falling back per batch to the
-      6-byte offsets-only format when a 64-posting block's key span
-      overflows uint16."""
+      (``batch_size_bucket``), so each (path, B-bucket, L-bucket) triple
+      hits one compiled executable instead of silently recompiling at
+      every new queue length;
+    * ``compressed=True`` ships block-delta16 device args (4 B/posting
+      class instead of 12), falling back per batch to the offsets-only
+      format when a 64-posting block's key span overflows uint16 — and
+      memoizes the per-key (base, delta16, offsets) triples in a second
+      ``PackedPostingCache`` so warm drains skip the O(B·K·L) host
+      re-encode entirely."""
 
     def __init__(
         self,
@@ -84,14 +115,20 @@ class SearchServingEngine:
         doc_shards: int = 1,
         compressed: bool = False,
         use_pack_cache: bool = True,
+        use_compressed_cache: bool = True,
         cache_entries: int = 4096,
         cache_bytes: int = 256 << 20,
+        k_fst: int = 2,
+        k_wv: int = 3,
+        k_ns: int = 3,
+        k_st: int = 3,
+        r_max: int = 4,
     ):
         self._source = index if hasattr(index, "snapshot") else None
         self.index = index.snapshot() if self._source is not None else index
         if compressed and getattr(self.index, "max_distance", 0) > 254:
-            # both compressed formats carry fragment bounds as uint8
-            # offsets from the anchor; beyond 254 they would silently clip
+            # all compressed formats carry fragment bounds / NSW offsets
+            # as uint8 distances; beyond 254 they would silently clip
             raise ValueError(
                 "compressed serving requires max_distance <= 254 "
                 f"(got {self.index.max_distance})"
@@ -102,79 +139,165 @@ class SearchServingEngine:
         self.top_k = top_k
         self.doc_shards = doc_shards
         self.compressed = compressed
+        self.k_fst = k_fst
+        self.k_wv = k_wv
+        self.k_ns = k_ns
+        self.k_st = k_st
+        self.r_max = r_max
         self.pack_cache = (
             PackedPostingCache(max_entries=cache_entries, max_bytes=cache_bytes)
             if use_pack_cache
             else None
         )
-        # compiled steps, one per payload format; jit caches per (B, L)
-        # shape under each, and batch_size_bucket bounds how many shapes
-        # each one ever sees
+        # per-key compressed rows derive from (and sit beside) the raw
+        # row cache; without it every warm compressed drain re-runs the
+        # O(B·K·L) host delta encoding
+        self.compressed_cache = (
+            PackedPostingCache(max_entries=cache_entries, max_bytes=cache_bytes,
+                               source=self.pack_cache)
+            if compressed and use_compressed_cache
+            else None
+        )
+        # compiled steps, one per (path, payload format); jit caches per
+        # (B, L) shape under each, and batch_size_bucket bounds how many
+        # shapes each one ever sees
         self._steps: dict[str, object] = {}
         self._queue: list[SearchRequest] = []
         self._queue_lock = threading.Lock()
-        # per-snapshot lemma ids -> L; validity is tied to the *pinned
-        # view's identity* (not to refresh() clearing it: a drain racing a
-        # refresh could otherwise re-insert a stale entry after the
-        # clear). Bounded: a high-cardinality query stream over a static
-        # index never refreshes, so the memo is cleared wholesale at the
-        # cap (rebuilding an entry is one n_postings scan)
-        self._bucket_memo: dict[tuple, int] = {}
-        self._bucket_memo_view = None
-        self._bucket_memo_cap = 65536
+        # per-snapshot lemma ids -> (path, bucket); validity is tied to
+        # the *pinned view's identity* (not to refresh() clearing it: a
+        # drain racing a refresh could otherwise re-insert a stale entry
+        # after the clear). Bounded: a high-cardinality query stream over
+        # a static index never refreshes, so the memo is cleared
+        # wholesale at the cap (rebuilding an entry is one n_postings
+        # scan per key)
+        self._route_memo: dict[tuple, tuple] = {}
+        self._route_memo_view = None
+        self._route_memo_cap = 65536
+        # scalar fallback engine, rebuilt per snapshot on first use
+        self._cpu_engine = None
         # delta-format eligibility is static per bucket (block/shard
-        # alignment); it also goes sticky-False after a uint16 span
-        # overflow so persistent-overflow corpora don't pay a failed
-        # delta encoding on every batch
-        self._delta_ok = {b: b % (64 * doc_shards) == 0 for b in self.buckets}
+        # alignment); on the cache-less compressed path it also goes
+        # sticky-False after a uint16 span overflow so persistent-
+        # overflow corpora don't pay a failed delta encoding per batch
+        # (with the compressed cache the verdict is per-key instead).
+        # Keyed per (path, bucket): one path's overflow must not demote
+        # the other paths' payloads at the same bucket
+        self._delta_ok: dict[tuple, bool] = {}
         self.stats = {"batches": 0, "requests": 0, "refreshes": 0,
                       "compressed_batches": 0, "offset_fallbacks": 0,
                       "bucket_hist": {b: 0 for b in self.buckets},
-                      "pack_cache": {}}
+                      "paths": {"qt1": 0, "qt2": 0, "qt5": 0, "cpu": 0},
+                      "pack_cache": {}, "compressed_cache": {}}
 
     def _step(self, kind: str):
         step = self._steps.get(kind)
         if step is None:
+            d = self.index.max_distance
             if kind == "base":
                 step = make_qt1_serve_step(self.mesh, top_k=self.top_k)
-            else:  # "delta" / "offsets"
+            elif kind in ("delta", "offsets"):
                 step = make_qt1_serve_step_compressed(
                     self.mesh, top_k=self.top_k, delta_g=(kind == "delta")
+                )
+            else:  # "qt2_raw" ... "qt5_offsets"
+                qtype, payload = kind.split("_", 1)
+                step = make_wv_serve_step(
+                    self.mesh, qtype, top_k=self.top_k, payload=payload,
+                    max_distance=d, r_max=self.r_max,
                 )
             self._steps[kind] = step
         return step
 
     def refresh(self) -> None:
         """Swap in the indexer's latest published snapshot (no-op for a
-        static ProximityIndex). Bucket memoization is dropped here; the
-        pack cache invalidates itself on the first lookup against the new
-        snapshot (its entries are keyed by snapshot identity)."""
+        static ProximityIndex). Route memoization is dropped here; the
+        row caches invalidate themselves on the first lookup against the
+        new snapshot (entries are keyed by snapshot identity, and
+        add-only refreshes retain untouched keys)."""
         if self._source is not None:
             self.index = self._source.snapshot()
             self.stats["refreshes"] += 1
 
-    def _bucket_for(self, index, lemma_ids) -> int:
-        if index is not self._bucket_memo_view:
-            self._bucket_memo = {}
-            self._bucket_memo_view = index
-        memo_key = tuple(lemma_ids)
-        b = self._bucket_memo.get(memo_key)
-        if b is not None:
-            return b
-        _, keys = select_fst_keys(list(lemma_ids))
-        longest = 0
-        for key in keys:
-            if index.fst is not None and key in index.fst:
-                longest = max(longest, index.fst.n_postings(key))
-        b = self.buckets[-1]
+    # -- routing -----------------------------------------------------------
+    def _ladder(self, longest: int) -> int:
+        # with doc_shards > 1 each range-partitioned shard segment holds
+        # only L / doc_shards slots, and a doc-skewed key can land all its
+        # postings in one segment: size conservatively for the worst-case
+        # skew so the packers never silently truncate below the ladder cap
+        longest *= self.doc_shards
         for cand in self.buckets:
             if longest <= cand:
-                b = cand
-                break
-        if len(self._bucket_memo) >= self._bucket_memo_cap:
-            self._bucket_memo.clear()
-        self._bucket_memo[memo_key] = b
-        return b
+                return cand
+        return self.buckets[-1]
+
+    def _route(self, index, lemma_ids) -> tuple:
+        """(path, bucket, plan) for one request: path is the compiled
+        step family ("qt1" / "qt2" / "qt5") or "cpu" for shapes the
+        compiled steps cannot express (the scalar engine is the
+        correctness backstop, so routing is conservative). plan carries
+        the memoized key selection — fst keys / size-ordered (w,v) keys /
+        the qt5_plan tuple — so warm drains skip re-deriving it in the
+        packers."""
+        if index is not self._route_memo_view:
+            self._route_memo = {}
+            self._route_memo_view = index
+            self._cpu_engine = None
+        memo_key = tuple(lemma_ids)
+        r = self._route_memo.get(memo_key)
+        if r is not None:
+            return r
+        r = self._classify_route(index, list(lemma_ids))
+        if len(self._route_memo) >= self._route_memo_cap:
+            self._route_memo.clear()
+        self._route_memo[memo_key] = r
+        return r
+
+    def _classify_route(self, index, ids) -> tuple:
+        if not ids or any(l == UNKNOWN_FL for l in ids):
+            return ("cpu", None, None) if ids else ("empty", None, None)
+        qtype = classify(ids, index.lexicon)
+        if qtype == QueryType.QT1:
+            if index.fst is None or len(ids) < 3 or len(ids) > index.max_distance:
+                return ("cpu", None, None)  # CPU degenerate/split paths
+            _, keys = select_fst_keys(ids)
+            if len(keys) > self.k_fst:
+                return ("cpu", None, None)
+            longest = 0
+            for key in keys:
+                if key in index.fst:
+                    longest = max(longest, index.fst.n_postings(key))
+            return ("qt1", self._ladder(longest), keys)
+        if qtype == QueryType.QT2:
+            # sharded QT2 stays on the CPU: the interval join's
+            # 2*MaxDistance window can reach across a doc (and therefore
+            # shard-segment) boundary, which the per-shard device join
+            # cannot see (pack_qt2_batch's doc_shards caveat) — exact
+            # equivalence beats the compiled step there
+            if index.wv is None or self.doc_shards > 1:
+                return ("cpu", None, None)
+            if len(select_wv_keys(ids)) > self.k_wv:
+                return ("cpu", None, None)
+            ordered, longest = ordered_wv_keys(index, ids)
+            return ("qt2", self._ladder(longest), ordered)
+        if qtype == QueryType.QT5:
+            if index.nsw is None:
+                return ("cpu", None, None)
+            plan = qt5_plan(index, ids)
+            if plan is None:
+                return ("cpu", None, None)
+            anchor, others, stops, counts = plan
+            if (
+                len(others) > self.k_ns
+                or len(stops) > self.k_st
+                or any(r > self.r_max for _, r in others)
+                or any(r > 254 for _, r in stops)
+            ):
+                return ("cpu", None, None)
+            longest = max(counts[anchor],
+                          max((counts[l] for l, _ in others), default=0))
+            return ("qt5", self._ladder(longest), plan)
+        return ("cpu", None, None)  # QT3/QT4: ordinary-index window scans
 
     def submit(self, lemma_ids) -> None:
         req = SearchRequest(list(lemma_ids))
@@ -182,14 +305,14 @@ class SearchServingEngine:
             self._queue.append(req)
 
     def drain(self) -> list[SearchResponse]:
-        """Serve everything queued. The snapshot is pinned once for the
-        whole drain; each request's bucket is computed once (memoized per
-        lemma-id tuple per snapshot), the queue is consumed in one pass,
-        and each bucket group is served in max_batch-sized chunks,
-        largest group first."""
-        out: list[SearchResponse] = []
+        """Serve everything queued, returning responses in submission
+        order. The snapshot is pinned once for the whole drain; each
+        request's (path, bucket) is computed once (memoized per lemma-id
+        tuple per snapshot), the queue is consumed in one pass, and each
+        (path, bucket) group is served in max_batch-sized chunks, largest
+        group first."""
         if not self._queue:
-            return out
+            return []
         index = self.index
         # swap the queue out under the submit lock BEFORE grouping: a
         # submit() racing this drain either lands before the swap (and is
@@ -197,53 +320,134 @@ class SearchServingEngine:
         # dropped into the already-grouped list
         with self._queue_lock:
             pending, self._queue = self._queue, []
-        by_bucket: dict[int, list[SearchRequest]] = {}
-        for r in pending:
-            by_bucket.setdefault(self._bucket_for(index, r.lemma_ids), []).append(r)
-        for bucket, reqs in sorted(by_bucket.items(), key=lambda kv: -len(kv[1])):
-            for lo in range(0, len(reqs), self.max_batch):
-                self._serve_batch(index, bucket, reqs[lo : lo + self.max_batch], out)
-        return out
+        slots: list = [None] * len(pending)
+        groups: dict[tuple, list[int]] = {}
+        for i, r in enumerate(pending):
+            path, bucket, _ = self._route(index, r.lemma_ids)
+            groups.setdefault((path, bucket), []).append(i)
+        for (path, bucket), idxs in sorted(groups.items(), key=lambda kv: -len(kv[1])):
+            if path == "empty":
+                for i in idxs:
+                    slots[i] = SearchResponse(results=dict(_EMPTY_RESULT),
+                                              latency_s=0.0, bucket=0,
+                                              batch_size=1, path=path)
+                self.stats["requests"] += len(idxs)
+                self.stats["paths"]["empty"] = (
+                    self.stats["paths"].get("empty", 0) + len(idxs)
+                )
+            elif path == "cpu":
+                self._serve_cpu(index, pending, idxs, slots)
+            else:
+                for lo in range(0, len(idxs), self.max_batch):
+                    chunk = idxs[lo : lo + self.max_batch]
+                    self._serve_batch(index, path, bucket, pending, chunk, slots)
+        return slots
 
-    def _serve_batch(self, index, bucket, reqs, out) -> None:
-        t0 = time.perf_counter()
-        B_pad = batch_size_bucket(len(reqs), self.max_batch)
-        queries = [r.lemma_ids for r in reqs] + [[]] * (B_pad - len(reqs))
-        batch = pack_qt1_batch(
-            index, queries, L=bucket, K=2,
-            doc_shards=self.doc_shards, cache=self.pack_cache,
+    # -- the scalar correctness backstop ----------------------------------
+    def _serve_cpu(self, index, pending, idxs, slots) -> None:
+        from repro.core.search import ProximitySearchEngine
+
+        if self._cpu_engine is None or self._cpu_engine.index is not index:
+            self._cpu_engine = ProximitySearchEngine(
+                index, top_k=self.top_k, equalize_mode="bulk"
+            )
+        for i in idxs:
+            t0 = time.perf_counter()
+            res, _ = self._cpu_engine.search_ids(pending[i].lemma_ids)
+            slots[i] = SearchResponse(
+                results={"doc": res.doc, "start": res.start, "end": res.end,
+                         "score": res.score},
+                latency_s=time.perf_counter() - t0, bucket=0, batch_size=1,
+                path="cpu",
+            )
+        self.stats["requests"] += len(idxs)
+        self.stats["paths"]["cpu"] += len(idxs)
+
+    # -- compiled paths ----------------------------------------------------
+    def _path_fns(self, path):
+        """(assemble_fn, pack_fn, compress_fn, kind prefix, K kwargs) for
+        one compiled path — the only place the three paths differ."""
+        if path == "qt1":
+            return (assemble_qt1_compressed, pack_qt1_batch,
+                    compress_qt1_batch, "", {"K": self.k_fst})
+        if path == "qt2":
+            return (assemble_qt2_compressed, pack_qt2_batch,
+                    compress_qt2_batch, "qt2_", {"K": self.k_wv})
+        return (assemble_qt5_compressed, pack_qt5_batch,
+                compress_qt5_batch, "qt5_", {"Kn": self.k_ns, "Ks": self.k_st})
+
+    def _run_compiled(self, index, path, bucket, queries, plans):
+        """Pack + execute one padded batch on the right compiled step;
+        returns (batch_or_stub, device outs). ``plans`` carries the
+        route-memoized key selections, aligned with ``queries``."""
+        assemble_fn, pack_fn, compress_fn, prefix, kw = self._path_fns(path)
+        ccache = self.compressed_cache
+        if self.compressed and ccache is not None:
+            kind, args, stub = assemble_fn(
+                index, queries, L=bucket, doc_shards=self.doc_shards,
+                ccache=ccache, cache=self.pack_cache, plans=plans, **kw,
+            )
+            self._count_compressed(kind)
+            return stub, self._step(kind)(*args)
+        batch = pack_fn(
+            index, queries, L=bucket, doc_shards=self.doc_shards,
+            cache=self.pack_cache, plans=plans, **kw,
         )
-        if self.compressed:
-            # delta blocks are 64 postings wide and must not straddle the
-            # L // doc_shards shard segments (the compressed step shards
-            # the per-block base over the model axis): _delta_ok holds the
-            # static verdict, and goes False on first uint16 span overflow
-            kind = "offsets"
-            if self._delta_ok.get(bucket, False):
-                try:
-                    args = compress_qt1_batch(batch, delta_g=True)
-                    kind = "delta"
-                except ValueError:  # in-block key span overflows uint16
-                    self._delta_ok[bucket] = False
-            if kind == "offsets":
-                args = compress_qt1_batch(batch, delta_g=False)
-                self.stats["offset_fallbacks"] += 1
-            self.stats["compressed_batches"] += 1
-            outs = self._step(kind)(*args)
-        else:
-            outs = self._step("base")(*batch.device_args())
+        if not self.compressed:
+            raw_kind = "base" if path == "qt1" else f"{path}_raw"
+            return batch, self._step(raw_kind)(*batch.device_args())
+        kind, args = self._compress_batch(bucket, batch, compress_fn, prefix=prefix)
+        return batch, self._step(kind)(*args)
+
+    def _compress_batch(self, bucket, batch, compress_fn, prefix=""):
+        """Cache-less compressed path: whole-batch re-encode with the
+        per-(path, bucket) sticky delta verdict (PR 2 behavior, kept for
+        benchmarking and as the use_compressed_cache=False fallback)."""
+        ck = (prefix, bucket)
+        ok = self._delta_ok.get(ck)
+        if ok is None:
+            ok = bucket % (64 * self.doc_shards) == 0
+            self._delta_ok[ck] = ok
+        kind = "offsets"
+        if ok:
+            try:
+                args = compress_fn(batch, delta_g=True)
+                kind = "delta"
+            except ValueError:  # in-block key span overflows uint16
+                self._delta_ok[ck] = False
+        if kind == "offsets":
+            args = compress_fn(batch, delta_g=False)
+        self._count_compressed(kind)
+        return prefix + kind, args
+
+    def _count_compressed(self, kind: str) -> None:
+        self.stats["compressed_batches"] += 1
+        if kind.endswith("offsets"):
+            self.stats["offset_fallbacks"] += 1
+
+    def _serve_batch(self, index, path, bucket, pending, idxs, slots) -> None:
+        t0 = time.perf_counter()
+        B_pad = batch_size_bucket(len(idxs), self.max_batch)
+        pad = B_pad - len(idxs)
+        queries = [pending[i].lemma_ids for i in idxs] + [[]] * pad
+        plans = [self._route(index, pending[i].lemma_ids)[2] for i in idxs]
+        batch, outs = self._run_compiled(index, path, bucket, queries,
+                                         plans + [None] * pad)
         decoded = decode_results(batch, *outs)
         dt = time.perf_counter() - t0
         self.stats["batches"] += 1
-        self.stats["requests"] += len(reqs)
-        self.stats["bucket_hist"][bucket] += 1
+        self.stats["requests"] += len(idxs)
+        self.stats["paths"][path] += len(idxs)
+        if bucket in self.stats["bucket_hist"]:
+            self.stats["bucket_hist"][bucket] += 1
         if self.pack_cache is not None:
             self.stats["pack_cache"] = self.pack_cache.stats
-        for i in range(len(reqs)):
-            out.append(
-                SearchResponse(results=decoded[i], latency_s=dt, bucket=bucket,
-                               batch_size=len(reqs))
-            )
+        if self.compressed_cache is not None:
+            self.stats["compressed_cache"] = self.compressed_cache.stats
+        for bi, i in enumerate(idxs):
+            slots[i] = SearchResponse(results=decoded[bi], latency_s=dt,
+                                      bucket=bucket, batch_size=len(idxs),
+                                      path=path)
 
 
 class LMContinuousBatcher:

@@ -1,24 +1,40 @@
-"""Packed-posting serve cache (DESIGN.md §11).
+"""Packed-posting serve cache (DESIGN.md §11-§12).
 
 The paper's premise is that *frequently occurring* words dominate the
 query stream — which makes the serve path's host-side packing worst
 exactly where traffic is hottest: every drain re-read and re-padded the
-postings of the same few stop-word keys. ``PackedPostingCache`` memoizes
-the fully padded, range-partitioned ``(g, lo, hi)`` device rows that
-``pack_fst_key_rows`` derives for one (f,s,t) key at one (L, doc_shards)
-bucket, so packing a batch degenerates to B*K row copies.
+postings of the same few hot keys. ``PackedPostingCache`` memoizes the
+fully padded, range-partitioned device rows that the per-key packers in
+``core.jax_search`` derive for one key at one (L, doc_shards) bucket, so
+packing a batch degenerates to B*K row copies.
+
+Row kinds (one cache instance can hold any mix; entries are keyed by
+``(kind, key, L, doc_shards)``):
+
+* ``"fst"`` — (g, lo, hi) rows of one (f,s,t) key (QT1);
+* ``"wv"``  — (lo, hi) interval rows of one (w,v) key (QT2);
+* ``"ord"`` — the g row of one lemma's ordinary postings (QT5 streams);
+* ``"nsw"`` — (cnt, ext) NSW aggregates of one (anchor, stop) pair (QT5);
+* ``"fst_c" / "wv_c" / "ord_c" / "nsw_c"`` — the block-delta16-compressed
+  form of the same rows (base, delta16, uint8 side channels, delta_ok).
+  Compressed kinds derive from the base kind's rows — via ``source``
+  (typically the engine's raw-row cache) so a warm raw cache makes
+  compressed misses cheap.
 
 Invalidation rule: entries are valid only for the snapshot they were
 packed against. The cache tracks a single current ``snapshot_token``
-(``repro.index.segmented.snapshot_token``: a process-unique id minted per
-``SegmentedView``, or ``id()`` of a static immutable ``ProximityIndex``);
-the first lookup against a *different* snapshot clears everything — so
-``SegmentedIndex.refresh()`` invalidates naturally, and a stale row can
-never be served (the token is part of admission, not of the entry key).
+(``repro.index.segmented.snapshot_token``); the first lookup against a
+*different* snapshot invalidates — but after an **add-only** refresh
+(old segment set preserved, tombstones unchanged, doc stride unchanged)
+entries whose key is untouched by the added segments are *retained*
+instead of dropped: the merged rows of an untouched key are bitwise
+identical across such snapshots. Any other transition (compaction,
+deletes, stride growth) clears everything, so a stale row can never be
+served.
 
 Bounded by both an entry count and a byte budget (LRU eviction); hits,
-misses, evictions, invalidations and resident bytes are surfaced via
-``.stats`` and re-exported in ``SearchServingEngine.stats``.
+misses, evictions, invalidations, retentions and resident bytes are
+surfaced via ``.stats`` and re-exported in ``SearchServingEngine.stats``.
 """
 
 from __future__ import annotations
@@ -28,35 +44,88 @@ from collections import OrderedDict
 
 import numpy as np
 
-from repro.core.jax_search import pack_fst_key_rows
+from repro.core.jax_search import (
+    compress_fst_rows,
+    compress_nsw_rows,
+    compress_ord_rows,
+    compress_wv_rows,
+    pack_fst_key_rows,
+    pack_nsw_key_rows,
+    pack_ord_key_rows,
+    pack_wv_key_rows,
+    qt1_stride,
+)
 from repro.index.segmented import snapshot_token
 from repro.kernels.common import SENTINEL
 
+_DERIVERS = {
+    "fst": pack_fst_key_rows,
+    "wv": pack_wv_key_rows,
+    "ord": pack_ord_key_rows,
+    "nsw": pack_nsw_key_rows,
+}
+_COMPRESSORS = {
+    "fst_c": compress_fst_rows,
+    "wv_c": compress_wv_rows,
+    "ord_c": compress_ord_rows,
+    "nsw_c": compress_nsw_rows,
+}
+
+
+def _base_kind(kind: str) -> str:
+    return kind[:-2] if kind.endswith("_c") else kind
+
+
+def _key_in_segment(kind: str, key, seg_index) -> bool:
+    """Whether a segment's index could contribute postings to this entry
+    (the add-only retention test). NSW aggregates are keyed by the anchor
+    lemma: new anchor postings change both the row length and the
+    renumbering, while a segment without the anchor cannot add records."""
+    base = _base_kind(kind)
+    if base == "fst":
+        store = seg_index.fst
+    elif base == "wv":
+        store = seg_index.wv
+    elif base == "ord":
+        store = seg_index.ordinary
+    else:  # "nsw": key = (anchor, sid)
+        store = seg_index.ordinary
+        key = key[0]
+    return store is not None and key in store
+
 
 class PackedPostingCache:
-    """LRU cache of padded (g, lo, hi, present) rows for one snapshot."""
+    """LRU cache of padded per-key device rows for one snapshot."""
 
-    def __init__(self, max_entries: int = 4096, max_bytes: int = 256 << 20):
+    def __init__(self, max_entries: int = 4096, max_bytes: int = 256 << 20,
+                 source: "PackedPostingCache | None" = None):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        self.source = source  # raw-row cache compressed kinds derive from
         self._entries: OrderedDict = OrderedDict()  # positive: ck -> (rows, nbytes)
         self._absent: OrderedDict = OrderedDict()  # negative: ck -> rows
         self._token = None
         self._token_ref = None  # keeps the token's index alive (id() reuse)
         self._bytes = 0
-        self._sentinel_rows: dict = {}  # L -> shared all-SENTINEL row
+        self._sentinel_rows: dict = {}  # (kind, L) -> shared padding rows
         self._lock = threading.Lock()
-        self._counts = {"hits": 0, "misses": 0, "evictions": 0, "invalidations": 0}
+        self._counts = {"hits": 0, "misses": 0, "evictions": 0,
+                        "invalidations": 0, "retained": 0}
 
     # -- lookups ----------------------------------------------------------
     def get_rows(self, index, key, L: int, doc_shards: int = 1, stride: int | None = None):
+        """(f,s,t) rows — the original QT1 entry point (kind "fst")."""
+        return self.get(index, "fst", key, L, doc_shards, stride)
+
+    def get(self, index, kind: str, key, L: int, doc_shards: int = 1,
+            stride: int | None = None):
         """Rows for `key` at bucket (L, doc_shards), packed against
-        `index`'s current snapshot. Same contract as
-        ``pack_fst_key_rows``: three (L,) int32 arrays (read-only — they
-        are shared across batches, and alias one SENTINEL row when the
-        key is absent) plus a present flag. `stride` (snapshot-constant)
+        `index`'s current snapshot. The returned tuple matches the kind's
+        packer/compressor contract and ends with a present flag; arrays
+        are read-only (shared across batches; absent keys alias one
+        padding row set per (kind, L)). `stride` (snapshot-constant)
         avoids an O(n_docs) re-derivation per miss when the caller
         already has it."""
         # pin the immutable snapshot FIRST: given a mutable SegmentedIndex,
@@ -65,14 +134,12 @@ class PackedPostingCache:
         if hasattr(index, "snapshot"):
             index = index.snapshot()
         tok = snapshot_token(index)
-        ck = (key, L, doc_shards)
+        ck = (kind, key, L, doc_shards)
         with self._lock:
             if tok != self._token:
                 if self._entries or self._absent:
                     self._counts["invalidations"] += 1
-                self._entries.clear()
-                self._absent.clear()
-                self._bytes = 0
+                    self._retain_or_clear(index)
                 self._token = tok
                 # pin the token's index: for static indexes the token is
                 # id(), which must not be freed and reused while entries
@@ -91,13 +158,13 @@ class PackedPostingCache:
             self._counts["misses"] += 1
         # derive outside the lock: merged segment reads can be slow and
         # must not serialize concurrent serving threads
-        g, lo, hi, present = pack_fst_key_rows(index, key, L, doc_shards, stride)
-        if not present:
-            # negative entry: callers never read non-present rows, so all
-            # three alias one shared per-L SENTINEL row (0 bytes) and live
-            # in a separate LRU — a stream of distinct absent keys must
-            # not evict genuinely hot positive rows
-            rows = (self._shared_sentinel(L),) * 3 + (False,)
+        rows = self._derive(index, kind, key, L, doc_shards, stride)
+        if not rows[-1]:  # not present
+            # negative entry: callers never read non-present rows, so they
+            # alias one shared per-(kind, L) padding row set (0 bytes) and
+            # live in a separate LRU — a stream of distinct absent keys
+            # must not evict genuinely hot positive rows
+            rows = self._shared_sentinel(kind, L)
             with self._lock:
                 if tok != self._token:
                     return rows  # a refresh raced the derivation: don't admit
@@ -106,10 +173,11 @@ class PackedPostingCache:
                     self._absent.popitem(last=False)
                     self._counts["evictions"] += 1
             return rows
-        for a in (g, lo, hi):
-            a.setflags(write=False)
-        nbytes = g.nbytes + lo.nbytes + hi.nbytes
-        rows = (g, lo, hi, present)
+        nbytes = 0
+        for a in rows[:-1]:
+            if isinstance(a, np.ndarray):
+                a.setflags(write=False)
+                nbytes += a.nbytes
         with self._lock:
             if tok != self._token:
                 return rows  # a refresh raced the derivation: don't admit
@@ -124,13 +192,84 @@ class PackedPostingCache:
                     self._counts["evictions"] += 1
         return rows
 
-    def _shared_sentinel(self, L: int):
-        row = self._sentinel_rows.get(L)
-        if row is None:
-            row = np.full(L, SENTINEL, np.int32)
-            row.setflags(write=False)
-            self._sentinel_rows[L] = row
-        return row
+    def _derive(self, index, kind, key, L, doc_shards, stride):
+        packer = _DERIVERS.get(kind)
+        if packer is not None:
+            return packer(index, key, L, doc_shards, stride)
+        compressor = _COMPRESSORS[kind]
+        src = self.source if self.source is not None else self
+        raw = src.get(index, _base_kind(kind), key, L, doc_shards, stride)
+        return compressor(raw)
+
+    def _shared_sentinel(self, kind: str, L: int):
+        rows = self._sentinel_rows.get((kind, L))
+        if rows is None:
+            pad = np.full(L, SENTINEL, np.int32)
+            zero = np.zeros(L, np.int32)
+            if kind in ("fst", "wv", "ord"):
+                n = {"fst": 3, "wv": 2, "ord": 1}[kind]
+                rows = (pad,) * n + (False,)
+            elif kind == "nsw":
+                rows = (zero, zero, False)
+            else:  # compressed kinds: run the compressor on padding rows
+                base = _base_kind(kind)
+                raw = self._shared_sentinel(base, L)
+                rows = _COMPRESSORS[kind](raw)
+                rows = rows[:-1] + (False,)
+            for a in rows[:-1]:
+                if isinstance(a, np.ndarray):
+                    a.setflags(write=False)
+            self._sentinel_rows[(kind, L)] = rows
+        return rows
+
+    # -- invalidation / cross-snapshot retention --------------------------
+    def _retain_or_clear(self, new_index) -> None:
+        """Called under the lock when the snapshot token changes. After an
+        add-only refresh, keep entries whose key no added segment touches;
+        otherwise clear everything."""
+        added = self._addonly_segments(new_index)
+        if added is None:
+            self._entries.clear()
+            self._absent.clear()
+            self._bytes = 0
+            return
+        n_docs_changed = (
+            self._token_ref.doc_lengths.size != new_index.doc_lengths.size
+        )
+        for store in (self._entries, self._absent):
+            for ck in list(store.keys()):
+                kind, key, L, doc_shards = ck
+                # range-partition bounds depend on the total doc count
+                stale = doc_shards > 1 and n_docs_changed
+                stale = stale or any(
+                    _key_in_segment(kind, key, seg.index) for seg in added
+                )
+                if stale:
+                    ent = store.pop(ck)
+                    if store is self._entries:
+                        self._bytes -= ent[1]
+                else:
+                    self._counts["retained"] += 1
+
+    def _addonly_segments(self, new_index):
+        """The segments added since the cached snapshot, or None when the
+        transition is not add-only (compaction, deletes, stride change,
+        non-segmented index) and the cache must clear."""
+        old = self._token_ref
+        if old is None or new_index is old:
+            return None
+        for view in (old, new_index):
+            if not (hasattr(view, "segments") and hasattr(view, "tombstones")):
+                return None
+        old_ids = {id(s) for s in old.segments}
+        new_segs = list(new_index.segments)
+        if not old_ids <= {id(s) for s in new_segs}:
+            return None  # a merge/compaction replaced old segments
+        if not np.array_equal(old.tombstones, new_index.tombstones):
+            return None
+        if qt1_stride(old) != qt1_stride(new_index):
+            return None  # a longer doc moved every packed g value
+        return [s for s in new_segs if id(s) not in old_ids]
 
     # -- introspection ----------------------------------------------------
     @property

@@ -243,6 +243,129 @@ def test_drain_single_pass_grouping(world):
     assert not eng._queue
 
 
+# -- cross-snapshot retention ----------------------------------------------
+def _disjoint_vocab_index():
+    """Segmented index whose doc batches use disjoint stop-lemma sets, so
+    an add-only refresh leaves the first batch's keys untouched."""
+    from repro.core.lexicon import Lexicon
+
+    sw, fu = 8, 8
+    n_lem = sw + fu + 4
+    counts = np.arange(n_lem, 0, -1) * 50
+    lex = Lexicon.from_rank_counts(
+        counts=counts, doc_freqs=np.minimum(counts, 40), n_docs=40,
+        sw_count=sw, fu_count=fu,
+    )
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=4, tier_fanout=8)
+    docs_a = [[0, 1, 2, 0, 1, 2, 0, 1, 2, 0, 1, 2] for _ in range(8)]
+    docs_b = [[3, 4, 5, 3, 4, 5, 3, 4, 5, 3, 4, 5] for _ in range(8)]
+    return seg, docs_a, docs_b
+
+
+def test_addonly_refresh_retains_untouched_keys():
+    """After an add-only refresh, keys no new segment touches keep their
+    cached rows (same arrays, served as hits); keys the new segments do
+    touch are re-derived; any delete clears everything."""
+    seg, docs_a, docs_b = _disjoint_vocab_index()
+    for d in docs_a:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    cache = PackedPostingCache()
+    key_a = (0, 1, 2)
+    assert key_a in v1.fst
+    g1, _, _, _ = cache.get_rows(v1, key_a, 256, 1)
+    for d in docs_b:
+        seg.add_document(d)
+    v2 = seg.refresh()
+    st0 = cache.stats
+    g2, _, _, _ = cache.get_rows(v2, key_a, 256, 1)
+    assert g2 is g1  # retained, not re-derived
+    assert cache.stats["hits"] == st0["hits"] + 1
+    assert cache.stats["retained"] >= 1
+    assert cache.stats["invalidations"] == 1
+    # retained rows are bitwise what a fresh derivation would produce
+    assert np.array_equal(g2, pack_fst_key_rows(v2, key_a, 256, 1)[0])
+    # a key the added segments do touch misses and re-derives
+    key_b = (3, 4, 5)
+    assert key_b in v2.fst
+    misses0 = cache.stats["misses"]
+    cache.get_rows(v2, key_b, 256, 1)
+    assert cache.stats["misses"] == misses0 + 1
+    # a delete is not add-only: the whole cache clears
+    seg.delete_document(0)
+    v3 = seg.refresh()
+    misses1 = cache.stats["misses"]
+    g3, _, _, _ = cache.get_rows(v3, key_a, 256, 1)
+    assert cache.stats["misses"] == misses1 + 1
+    assert g3 is not g1
+
+
+def test_addonly_retention_drops_touched_entries_only():
+    seg, docs_a, docs_b = _disjoint_vocab_index()
+    for d in docs_a + docs_b:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    cache = PackedPostingCache()
+    for key in ((0, 1, 2), (3, 4, 5)):
+        cache.get_rows(v1, key, 256, 1)
+    # add more docs touching only the B vocabulary
+    for d in docs_b[:4]:
+        seg.add_document(d)
+    v2 = seg.refresh()
+    cache.get_rows(v2, (0, 1, 2), 256, 1)  # hit (retained)
+    st = cache.stats
+    assert st["hits"] == 1 and st["retained"] >= 1
+    cache.get_rows(v2, (3, 4, 5), 256, 1)  # miss (touched by new segs)
+    assert cache.stats["misses"] == 3
+    # rows for the touched key now reflect the new postings
+    g = cache.get_rows(v2, (3, 4, 5), 256, 1)[0]
+    assert np.array_equal(g, pack_fst_key_rows(v2, (3, 4, 5), 256, 1)[0])
+
+
+# -- compressed-row cache ---------------------------------------------------
+def test_compressed_cache_rows_match_batch_encoder(world):
+    """Per-key compressed rows must reproduce what the whole-batch
+    encoder emits for that key's slice."""
+    from repro.core.jax_search import compress_qt1_batch, pack_qt1_batch
+
+    table, lex, idx, queries, mesh = world
+    raw = PackedPostingCache()
+    ccache = PackedPostingCache(source=raw)
+    batch = pack_qt1_batch(idx, queries[:4], L=256, K=2)
+    args = compress_qt1_batch(batch, delta_g=True)
+    key_base, key_delta, lo_off, hi_off = (np.asarray(a) for a in args[:4])
+    from repro.core.query import select_fst_keys
+
+    for qi, q in enumerate(queries[:4]):
+        _, keys = select_fst_keys(list(q))
+        keys = (keys + [keys[-1]] * 2)[:2]
+        for ki, key in enumerate(keys):
+            base, delta, lo_o, hi_o, ok, present = ccache.get(idx, "fst_c", key, 256, 1)
+            assert ok and present
+            assert np.array_equal(base, key_base[qi, ki])
+            assert np.array_equal(delta, key_delta[qi, ki])
+            assert np.array_equal(lo_o, lo_off[qi, ki])
+            assert np.array_equal(hi_o, hi_off[qi, ki])
+    assert ccache.stats["bytes"] > 0
+    # the compressed cache derived its raw rows through `source`
+    assert raw.stats["misses"] > 0
+
+
+def test_engine_compressed_cache_stats_and_warm_equivalence(world):
+    table, lex, idx, queries, mesh = world
+    eng = SearchServingEngine(idx, mesh, buckets=BUCKETS, max_batch=8, top_k=16,
+                              compressed=True)
+    reenc = SearchServingEngine(idx, mesh, buckets=BUCKETS, max_batch=8, top_k=16,
+                                compressed=True, use_compressed_cache=False)
+    assert eng.compressed_cache is not None and reenc.compressed_cache is None
+    cold = _drain(eng, queries)
+    warm = _drain(eng, queries)
+    assert cold == warm == _drain(reenc, queries)
+    st = eng.stats["compressed_cache"]
+    assert st["hits"] > 0 and st["misses"] > 0
+    assert st["hit_rate"] > 0.4  # second drain is all hits
+
+
 def test_decode_results_skips_masked_rows():
     stride = 100
     s = np.array([[5.0, 4.0, -1e30], [-1e30] * 3, [7.0, -1e30, -1e30]], np.float32)

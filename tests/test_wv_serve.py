@@ -1,0 +1,267 @@
+"""Compiled QT2/QT5 serve pipeline (DESIGN.md §12): the device joins
+must match the CPU reference engine exactly — over static and segmented
+(post-compaction) indexes, across all three payload formats, in
+mixed-type drains, and through the uint16 span-overflow fallback."""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.jax_search import (
+    compress_qt2_batch,
+    compress_qt5_batch,
+    decode_results,
+    make_wv_serve_step,
+    pack_qt2_batch,
+    pack_qt5_batch,
+)
+from repro.core.lexicon import Lexicon
+from repro.core.query import QueryType, classify
+from repro.core.search import ProximitySearchEngine
+from repro.data.corpus import (
+    TokenTable,
+    generate_corpus,
+    sample_mixed_queries,
+    sample_typed_queries,
+)
+from repro.index import SegmentedIndex
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import SearchServingEngine
+
+D = 5
+L = 512
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=80, mean_doc_len=70, vocab_size=500, seed=11)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    idx = build_index(table, lex, max_distance=D)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    queries = {
+        k: sample_typed_queries(table, lex, 10, k, window=D, seed=3)
+        for k in ("qt1", "qt2", "qt3", "qt5")
+    }
+    return table, lex, idx, mesh, queries
+
+
+def _cpu_sets(idx, qs):
+    eng = ProximitySearchEngine(idx, top_k=100_000, equalize_mode="bulk")
+    out = []
+    for q in qs:
+        res, _ = eng.search_ids(q)
+        out.append(set(zip(res.doc.tolist(), res.start.tolist(), res.end.tolist())))
+    return out
+
+
+def _decoded_sets(decoded, n):
+    return [
+        set(zip(decoded[i]["doc"].tolist(), decoded[i]["start"].tolist(),
+                decoded[i]["end"].tolist()))
+        for i in range(n)
+    ]
+
+
+@pytest.mark.parametrize("payload", ["raw", "delta", "offsets"])
+def test_device_qt2_matches_reference(world, payload):
+    table, lex, idx, mesh, queries = world
+    qs = queries["qt2"]
+    assert all(classify(q, lex) == QueryType.QT2 for q in qs)
+    batch = pack_qt2_batch(idx, qs, L=L, K=3)
+    step = make_wv_serve_step(mesh, "qt2", top_k=256, payload=payload, max_distance=D)
+    args = (batch.device_args() if payload == "raw"
+            else compress_qt2_batch(batch, delta_g=(payload == "delta")))
+    got = _decoded_sets(decode_results(batch, *step(*args)), len(qs))
+    for qi, (g, w) in enumerate(zip(got, _cpu_sets(idx, qs))):
+        assert g == w, (payload, qi, qs[qi], sorted(g ^ w)[:5])
+
+
+@pytest.mark.parametrize("payload", ["raw", "delta", "offsets"])
+def test_device_qt5_matches_reference(world, payload):
+    table, lex, idx, mesh, queries = world
+    qs = queries["qt5"]
+    assert all(classify(q, lex) == QueryType.QT5 for q in qs)
+    batch = pack_qt5_batch(idx, qs, L=L, Kn=4, Ks=4)
+    step = make_wv_serve_step(mesh, "qt5", top_k=256, payload=payload,
+                              max_distance=D, r_max=4)
+    args = (batch.device_args() if payload == "raw"
+            else compress_qt5_batch(batch, delta_g=(payload == "delta")))
+    got = _decoded_sets(decode_results(batch, *step(*args)), len(qs))
+    for qi, (g, w) in enumerate(zip(got, _cpu_sets(idx, qs))):
+        assert g == w, (payload, qi, qs[qi], sorted(g ^ w)[:5])
+
+
+def _resp_set(r):
+    return set(zip(r.results["doc"].tolist(), r.results["start"].tolist(),
+                   r.results["end"].tolist()))
+
+
+def test_mixed_drain_matches_cpu_engine(world):
+    """A single drain routes QT1/QT2/QT5 to their compiled steps and
+    QT3 to the scalar engine; responses come back in submission order
+    and match the CPU reference per request."""
+    table, lex, idx, mesh, queries = world
+    mixed = [q for k in ("qt1", "qt2", "qt3", "qt5") for q in queries[k][:6]]
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    for q in mixed:
+        eng.submit(q)
+    resp = eng.drain()
+    assert len(resp) == len(mixed)
+    want = _cpu_sets(idx, mixed)
+    for q, r, w in zip(mixed, resp, want):
+        assert _resp_set(r) == w, (q, r.path)
+    paths = eng.stats["paths"]
+    assert paths["qt1"] >= 6 and paths["qt2"] == 6 and paths["qt5"] == 6
+    assert paths["cpu"] >= 6  # the QT3 slice
+    # second (warm-cache) drain is identical
+    for q in mixed:
+        eng.submit(q)
+    warm = eng.drain()
+    assert [_resp_set(r) for r in warm] == [_resp_set(r) for r in resp]
+    assert eng.stats["pack_cache"]["hits"] > 0
+
+
+@pytest.mark.parametrize("use_ccache", [True, False])
+def test_compressed_mixed_drain_matches_uncompressed(world, use_ccache):
+    table, lex, idx, mesh, queries = world
+    mixed = [q for k in ("qt1", "qt2", "qt5") for q in queries[k][:6]]
+    base = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    comp = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8,
+                               top_k=256, compressed=True,
+                               use_compressed_cache=use_ccache)
+    for round_ in range(2):  # second round serves from the row caches
+        for q in mixed:
+            base.submit(q)
+            comp.submit(q)
+        got_b = [_resp_set(r) for r in base.drain()]
+        got_c = [_resp_set(r) for r in comp.drain()]
+        assert got_b == got_c, round_
+    assert comp.stats["compressed_batches"] > 0
+    if use_ccache:
+        st = comp.stats["compressed_cache"]
+        assert st["hits"] > 0 and st["misses"] > 0 and st["bytes"] > 0
+
+
+def test_segmented_post_compaction_equivalence(world):
+    """QT1-QT5 dispatch over a segmented snapshot that went through
+    deletes and a forced major compaction must match a CPU engine over
+    the same snapshot."""
+    table, lex, idx, mesh, queries = world
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=16)
+    for d in table.to_doc_lists():
+        seg.add_document(d)
+    seg.refresh()
+    seg.delete_document(3)
+    seg.delete_document(40)
+    seg.compact(force=True)
+    view = seg.refresh()
+    mixed = [q for k in ("qt1", "qt2", "qt3", "qt5") for q in queries[k][:5]]
+    eng = SearchServingEngine(seg, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    comp = SearchServingEngine(seg, mesh, buckets=(256, 1024), max_batch=8,
+                               top_k=256, compressed=True)
+    for q in mixed:
+        eng.submit(q)
+        comp.submit(q)
+    got = [_resp_set(r) for r in eng.drain()]
+    got_c = [_resp_set(r) for r in comp.drain()]
+    want = _cpu_sets(view, mixed)
+    assert got == want
+    assert got_c == want
+    served = {doc for s in got for doc, _, _ in s}
+    assert 3 not in served and 40 not in served
+
+
+def test_cpu_route_for_inexpressible_shapes(world):
+    """Queries the compiled steps cannot express (too many (w,v) keys /
+    long QT1 splits) fall back to the scalar engine — and still match
+    it, because they *are* it."""
+    table, lex, idx, mesh, queries = world
+    sw, fu = lex.sw_count, lex.fu_count
+    long_qt2 = list(range(sw, sw + 8))  # 8 frequent lemmas -> 4 (w,v) keys > k_wv
+    long_qt1 = [0, 1, 2, 3, 4, 5, 0]  # len 7 > MaxDistance -> CPU split path
+    assert classify(long_qt2, lex) == QueryType.QT2
+    assert classify(long_qt1, lex) == QueryType.QT1
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    for q in (long_qt2, long_qt1, []):
+        eng.submit(q)
+    resp = eng.drain()
+    want = _cpu_sets(idx, [long_qt2, long_qt1])
+    assert _resp_set(resp[0]) == want[0] and resp[0].path == "cpu"
+    assert _resp_set(resp[1]) == want[1] and resp[1].path == "cpu"
+    assert resp[2].results["doc"].size == 0 and resp[2].path == "empty"
+    assert eng.stats["paths"]["cpu"] == 2
+
+
+def _overflow_world():
+    """A corpus whose hot keys recur in documents so far apart that one
+    64-posting delta block spans more than uint16: compressed serving
+    must fall back to the offsets format, per key, on every path."""
+    sw_count, fu_count = 6, 6
+    fu = sw_count  # first frequently-used lemma
+    ordinary = sw_count + fu_count
+    pattern = [0, 1, 2, fu, fu + 1, ordinary, ordinary + 1]
+    filler = [[ordinary + 2] for _ in range(5200)]  # 5200 * stride(14) > 2**16
+    docs = [np.array(pattern)] + [np.array(f) for f in filler] + [np.array(pattern)]
+    table = TokenTable.from_docs(docs)
+    n = ordinary + 3
+    counts = np.arange(n, 0, -1) * 100
+    dfs = np.minimum(counts, len(docs))
+    lex = Lexicon.from_rank_counts(counts=counts, doc_freqs=dfs, n_docs=len(docs),
+                                   sw_count=sw_count, fu_count=fu_count)
+    idx = build_index(table, lex, max_distance=D)
+    queries = [[0, 1, 2], [fu, fu + 1], [0, fu, fu + 1]]
+    assert classify(queries[0], lex) == QueryType.QT1
+    assert classify(queries[1], lex) == QueryType.QT2
+    assert classify(queries[2], lex) == QueryType.QT5
+    return idx, queries
+
+
+@pytest.mark.parametrize("use_ccache", [True, False])
+def test_uint16_overflow_falls_back_to_offsets(world, use_ccache):
+    _, _, _, mesh, _ = world
+    idx, queries = _overflow_world()
+    base = SearchServingEngine(idx, mesh, buckets=(256,), max_batch=4, top_k=64)
+    comp = SearchServingEngine(idx, mesh, buckets=(256,), max_batch=4, top_k=64,
+                               compressed=True, use_compressed_cache=use_ccache)
+    for _ in range(2):
+        for q in queries:
+            base.submit(q)
+            comp.submit(q)
+        got_b = [_resp_set(r) for r in base.drain()]
+        got_c = [_resp_set(r) for r in comp.drain()]
+        assert got_b == got_c
+    # every query's matches span both pattern docs
+    assert all(s for s in got_b)
+    assert comp.stats["offset_fallbacks"] >= 3
+    assert comp.stats["offset_fallbacks"] == comp.stats["compressed_batches"]
+
+
+def test_qt5_repeated_lemma_multiplicities(world):
+    """Repeated non-stop lemmas exercise the r-nearest (r > 1) join on
+    device; repeated stop lemmas exercise cnt >= r on the NSW rows."""
+    table, lex, idx, mesh, queries = world
+    sw = lex.sw_count
+    qs = []
+    for q in queries["qt5"]:
+        ns = [l for l in q if l >= sw]
+        st = [l for l in q if l < sw]
+        qs.append(q + [ns[0]])  # duplicate a non-stop lemma
+        qs.append(q + [st[0]])  # duplicate a stop lemma
+    qs = [q for q in qs if classify(q, lex) == QueryType.QT5][:10]
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    for q in qs:
+        eng.submit(q)
+    resp = eng.drain()
+    want = _cpu_sets(idx, qs)
+    for q, r, w in zip(qs, resp, want):
+        assert _resp_set(r) == w, (q, r.path, sorted(_resp_set(r) ^ w)[:5])
+    assert eng.stats["paths"]["qt5"] == len(qs)
+
+
+def test_mixed_sampler_shapes(world):
+    table, lex, idx, mesh, queries = world
+    mixed = sample_mixed_queries(table, lex, 12, window=D, seed=7)
+    assert len(mixed) == 12
+    kinds = {classify(q, lex) for q in mixed}
+    assert {QueryType.QT1, QueryType.QT2, QueryType.QT5} <= kinds
