@@ -1,9 +1,10 @@
-"""Serve-path benchmarks: compiled QT1/QT2/QT5 step latency per bucket
-(the response-time guarantee, DESIGN.md §3/§12) plus the host hot path
-around it (DESIGN.md §11) — packed-posting-cache cold vs warm packing,
-engine drains uncompressed vs warm-cache vs compressed (re-encode-per-
-drain vs per-key compressed-row cache), and mixed-type drains through
-the query-type dispatch.
+"""Serve-path benchmarks: compiled QT1-QT5 step latency per bucket
+(the response-time guarantee, DESIGN.md §3/§12-§13) plus the host hot
+path around it (DESIGN.md §11) — packed-posting-cache cold vs warm
+packing, engine drains uncompressed vs warm-cache vs compressed
+(re-encode-per-drain vs per-key compressed-row cache), per-type
+cold/warm drains for every dispatch route, and five-type mixed drains
+through the query-type dispatch.
 
 ``run()`` returns ``(rows, report)``: CSV rows for the harness and a
 nested dict that ``benchmarks/run.py --json`` writes to BENCH_serve.json
@@ -196,6 +197,8 @@ def run(smoke: bool = False):
     # -- typed + mixed drains through the query-type dispatch --------------
     typed = {
         "qt2": sample_typed_queries(table, lex, n_q, "qt2", window=3, seed=6),
+        "qt3": sample_typed_queries(table, lex, n_q, "qt3", window=3, seed=9),
+        "qt4": sample_typed_queries(table, lex, n_q, "qt4", window=3, seed=10),
         "qt5": sample_typed_queries(table, lex, n_q, "qt5", window=3, seed=7),
     }
     rep["drain_typed"] = {}

@@ -26,8 +26,9 @@ def main() -> None:
     ap.add_argument("--compressed", action="store_true",
                     help="serve the delta-coded posting payload (DESIGN.md §11-§12)")
     ap.add_argument("--mixed", action="store_true",
-                    help="mixed QT1/QT2/QT5 traffic through the query-type "
-                         "dispatch instead of all-stop-word QT1 queries")
+                    help="mixed QT1-QT5 traffic through the query-type "
+                         "dispatch (DESIGN.md §13) instead of all-stop-word "
+                         "QT1 queries")
     args = ap.parse_args()
 
     t0 = time.time()

@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.index_builder import ProximityIndex
-from repro.core.query import qt5_plan, select_fst_keys, select_wv_keys
+from repro.core.query import qt34_plan, qt5_plan, select_fst_keys, select_wv_keys
 from repro.kernels.common import SENTINEL
 
 from repro.kernels.common import shard_map_compat as _shard_map
@@ -177,14 +177,17 @@ def _nearest_r_multi(b_rows, centers, max_sep: int, r, r_max: int):
     return jax.vmap(one)(b_rows, centers, r)
 
 
-def qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, max_sep: int, r_max: int):
-    """Join the QT5 anchor (rarest non-stop lemma) posting row against
-    the other non-stop rows (r-nearest within MaxDistance, r = query
-    multiplicity) and the per-(anchor, stop-lemma) NSW aggregate rows
-    (neighbor count >= r plus nearest-offset fragment extension — no
-    stop-lemma posting list is ever materialized, the paper's point).
-    Keys with r == 0 are padding. a_g: (B, L); ns_g: (B, Kn, L);
-    st_cnt/st_ext: (B, Ks, L) aligned with the anchor row."""
+def qt34_join(a_g, ns_g, ns_r, max_sep: int, r_max: int):
+    """Ordinary-window join (QT3/QT4, DESIGN.md §13): the anchor lemma's
+    ordinary posting row against the other lemmas' ordinary rows — for
+    each anchor posting, every other row must hold r distinct positions
+    within MaxDistance (r = the lemma's query multiplicity, traced per
+    key, r <= static r_max); the r nearest extend the fragment. This is
+    the device twin of ``search.ProximitySearchEngine._ordinary_window``
+    and exactly the non-stop half of the QT5 join, which reuses it.
+    Keys with r == 0 are padding and do not constrain. a_g: (B, L);
+    ns_g: (B, Kn, L); ns_r: (B, Kn). Returns (valid, lo, hi) aligned
+    with the anchor row."""
     valid = a_g != SENTINEL
     lo = a_g
     hi = a_g
@@ -196,6 +199,18 @@ def qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, max_sep: int, r_max: int):
         upd = active & m
         lo = jnp.where(upd, jnp.minimum(lo, mn), lo)
         hi = jnp.where(upd, jnp.maximum(hi, mx), hi)
+    return valid, lo, hi
+
+
+def qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, max_sep: int, r_max: int):
+    """Join the QT5 anchor (rarest non-stop lemma) posting row against
+    the other non-stop rows (the ordinary-window join of
+    :func:`qt34_join`) and the per-(anchor, stop-lemma) NSW aggregate
+    rows (neighbor count >= r plus nearest-offset fragment extension —
+    no stop-lemma posting list is ever materialized, the paper's point).
+    Keys with r == 0 are padding. a_g: (B, L); ns_g: (B, Kn, L);
+    st_cnt/st_ext: (B, Ks, L) aligned with the anchor row."""
+    valid, lo, hi = qt34_join(a_g, ns_g, ns_r, max_sep, r_max)
     for k in range(st_cnt.shape[1]):
         r = st_r[:, k][:, None]
         active = r > 0
@@ -309,21 +324,26 @@ def make_qt1_serve_step_compressed(mesh, top_k: int = 16, delta_g: bool = True):
 
 def make_wv_serve_step(mesh, qtype: str, top_k: int = 16, payload: str = "raw",
                        max_distance: int = 5, r_max: int = 4):
-    """Build the jitted, mesh-sharded QT2/QT5 serve step — the
-    two-component-(w,v)-key / NSW analogue of :func:`make_qt1_serve_step`
-    (DESIGN.md §12). One factory covers both query types and all three
-    payload formats so the sharding/all-gather plumbing exists once:
+    """Build the jitted, mesh-sharded QT2/QT3/QT4/QT5 serve step — the
+    (w,v)-key / ordinary-window / NSW analogue of
+    :func:`make_qt1_serve_step` (DESIGN.md §12-§13). One factory covers
+    all non-QT1 query types (``"qt34"`` serves both QT3 and QT4: their
+    evaluation is identical, only the lemma classes differ) and all
+    three payload formats so the sharding/all-gather plumbing exists
+    once:
 
     * ``payload="raw"``     — int32 rows as packed by pack_qt2_batch /
-      pack_qt5_batch;
+      pack_qt34_batch / pack_qt5_batch;
     * ``payload="delta"``   — block-delta16-coded anchor streams
       (4 B/posting class, like the QT1 compressed step);
     * ``payload="offsets"`` — int32 anchor streams + uint8 side channels
-      (the fallback when a 64-posting block's span overflows uint16).
+      (the fallback when a 64-posting block's span overflows uint16;
+      for qt34 — whose payload is g rows only — it equals "raw" and
+      exists so the engine's per-format step naming stays uniform).
 
     The joins are payload-independent: compressed payloads are
     reconstructed elementwise and fuse into them."""
-    assert qtype in ("qt2", "qt5")
+    assert qtype in ("qt2", "qt34", "qt5")
     assert payload in ("raw", "delta", "offsets")
     has_pod = "pod" in mesh.axis_names
     batch_axes = ("pod", "data") if has_pod else ("data",)
@@ -370,6 +390,27 @@ def make_wv_serve_step(mesh, qtype: str, top_k: int = 16, payload: str = "raw",
                 return join_finish(lo, hi, n_keys, idf_sum, span_adjust)
 
             in_specs = (row, row, vec, vec, vec)
+    elif qtype == "qt34":
+        sep = max_distance
+
+        def join_finish(a_g, ns_g, ns_r, idf_sum, span_adjust):
+            valid, lo, hi = qt34_join(a_g, ns_g, ns_r, sep, r_max)
+            score = qt1_score(valid, lo, hi, idf_sum, span_adjust)
+            return finish(score, lo, lo, hi)
+
+        if payload in ("raw", "offsets"):
+            local_step = join_finish
+            in_specs = (arow, row, kvec, vec, vec)
+        else:  # delta
+            def local_step(a_base, a_delta, a_pad, ns_base, ns_delta, ns_pad,
+                           ns_r, idf_sum, span_adjust):
+                a_g = jnp.repeat(a_base, BLK, axis=1) + a_delta.astype(jnp.int32)
+                a_g = jnp.where(a_pad == 1, SENTINEL, a_g)
+                ns_g = jnp.repeat(ns_base, BLK, axis=2) + ns_delta.astype(jnp.int32)
+                ns_g = jnp.where(ns_pad == 1, SENTINEL, ns_g)
+                return join_finish(a_g, ns_g, ns_r, idf_sum, span_adjust)
+
+            in_specs = (arow, arow, arow, row, row, row, kvec, vec, vec)
     else:
         sep = max_distance
 
@@ -786,6 +827,20 @@ class QT5Batch:
             self.st_r, self.idf_sum, self.span_adjust))
 
 
+@dataclass
+class QT34Batch:
+    a_g: np.ndarray  # (B, L) anchor ordinary posting row
+    ns_g: np.ndarray  # (B, Kn, L) other ordinary rows
+    ns_r: np.ndarray  # (B, Kn) multiplicities (0 = padding)
+    idf_sum: np.ndarray
+    span_adjust: np.ndarray
+    stride: int
+
+    def device_args(self):
+        return tuple(jnp.asarray(a) for a in (
+            self.a_g, self.ns_g, self.ns_r, self.idf_sum, self.span_adjust))
+
+
 def ordered_wv_keys(index, lemma_ids) -> tuple:
     """select_wv_keys ordered sparsest-first by live posting count — the
     CPU engine anchors its interval join on the smallest list, and its
@@ -931,6 +986,62 @@ def pack_qt5_batch(
     return QT5Batch(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, idf_sum, span_adj, stride)
 
 
+def pack_qt34_batch(
+    index,
+    queries: list[list[int]],
+    L: int,
+    Kn: int = 4,
+    doc_shards: int = 1,
+    cache=None,
+    plans: list | None = None,
+) -> QT34Batch:
+    """Pack QT3/QT4 queries: anchor (most frequent lemma) + other
+    ordinary rows, all kind "ord" — the same per-key rows the QT5
+    packer's non-stop streams use, so a warm row cache is shared across
+    both paths. The serving router guarantees the per-query constraint
+    count fits Kn and multiplicities fit the step's r_max; anything else
+    takes the CPU fallback. Same alignment invariant as pack_qt1_batch:
+    doc_shards must equal the mesh's model-axis size."""
+    B = len(queries)
+    lex = index.lexicon
+    stride = qt1_stride(index)
+    assert L % doc_shards == 0
+    a_g = np.full((B, L), SENTINEL, np.int32)
+    ns_g = np.full((B, Kn, L), SENTINEL, np.int32)
+    ns_r = np.zeros((B, Kn), np.int32)
+    idf_sum = np.zeros(B, np.float32)
+    span_adj = np.zeros(B, np.float32)
+    for qi, q in enumerate(queries):
+        if not q:
+            continue  # padding slot
+        plan = (plans[qi] if plans is not None and plans[qi] is not None
+                else qt34_plan(index, q))
+        anchor, others, _ = plan
+        span_adj[qi] = len(q) - 1
+        if cache is not None:
+            g_row, present = cache.get(index, "ord", anchor, L, doc_shards, stride)
+            if present:
+                a_g[qi] = g_row
+        else:
+            _, present = pack_ord_key_rows(index, anchor, L, doc_shards, stride,
+                                           out=(a_g[qi],))
+        for ki, (lemma, r) in enumerate(others[:Kn]):
+            ns_r[qi, ki] = r
+            if lemma == anchor:
+                # the anchor's own multiplicity constraint re-windows its row
+                ns_g[qi, ki] = a_g[qi]
+                continue
+            if cache is not None:
+                g_row, pres = cache.get(index, "ord", lemma, L, doc_shards, stride)
+                if pres:
+                    ns_g[qi, ki] = g_row
+            else:
+                pack_ord_key_rows(index, lemma, L, doc_shards, stride,
+                                  out=(ns_g[qi, ki],))
+        idf_sum[qi] = sum(lex.idf(l) for l in q)
+    return QT34Batch(a_g, ns_g, ns_r, idf_sum, span_adj, stride)
+
+
 def compress_qt2_batch(batch: QT2Batch, delta_g: bool = True):
     """QT2Batch -> compressed device args. Interval widths (hi - lo <=
     MaxDistance <= 254) ride as uint8 (255 marks padding); with delta_g
@@ -949,6 +1060,30 @@ def compress_qt2_batch(batch: QT2Batch, delta_g: bool = True):
     if not ok:
         raise ValueError("in-block key span exceeds uint16; use offsets format")
     return (jnp.asarray(base), jnp.asarray(delta)) + tail
+
+
+def compress_qt34_batch(batch: QT34Batch, delta_g: bool = True):
+    """QT34Batch -> compressed device args: with delta_g the anchor and
+    other ordinary streams are block-delta16 coded behind uint8 pad
+    masks (4 B/posting class); without it the int32 rows ship as-is
+    (the "offsets" format — QT3/QT4 has no uint8 side channels, so the
+    fallback is simply uncompressed). Raises on uint16 overflow (the
+    engine then falls back to the offsets format)."""
+    tail = (jnp.asarray(batch.ns_r), jnp.asarray(batch.idf_sum),
+            jnp.asarray(batch.span_adjust))
+    if not delta_g:
+        return (jnp.asarray(batch.a_g), jnp.asarray(batch.ns_g)) + tail
+    a = batch.a_g.astype(np.int64)
+    ns = batch.ns_g.astype(np.int64)
+    assert a.shape[-1] % BLK == 0
+    a_base, a_delta, ok_a = _delta16_blocks(a)
+    ns_base, ns_delta, ok_n = _delta16_blocks(ns)
+    if not (ok_a and ok_n):
+        raise ValueError("in-block key span exceeds uint16; use offsets format")
+    a_pad = (a == np.int64(SENTINEL)).astype(np.uint8)
+    ns_pad = (ns == np.int64(SENTINEL)).astype(np.uint8)
+    return (jnp.asarray(a_base), jnp.asarray(a_delta), jnp.asarray(a_pad),
+            jnp.asarray(ns_base), jnp.asarray(ns_delta), jnp.asarray(ns_pad)) + tail
 
 
 def compress_qt5_batch(batch: QT5Batch, delta_g: bool = True):
@@ -1159,6 +1294,88 @@ def assemble_qt2_compressed(index, queries, L, K=3, doc_shards=1,
             if pres:
                 wv_lo[qi, ki] = lo_row
     return "qt2_offsets", (jnp.asarray(wv_lo),) + tail, stub
+
+
+def assemble_qt34_compressed(index, queries, L, Kn=4, doc_shards=1,
+                             ccache=None, cache=None, plans=None):
+    """Compressed QT3/QT4 device args from per-key cached rows (kind
+    "ord_c" — shared with the QT5 anchor/non-stop streams, so a key hot
+    on either path warms both). Returns (kind, args, batch_stub), kind
+    "qt34_delta" / "qt34_offsets"."""
+    B = len(queries)
+    stride = qt1_stride(index)
+    lex = index.lexicon
+    delta_fmt = L % (BLK * doc_shards) == 0
+    a_pad = np.ones((B, L), np.uint8)
+    ns_pad = np.ones((B, Kn, L), np.uint8)
+    ns_r = np.zeros((B, Kn), np.int32)
+    idf_sum = np.zeros(B, np.float32)
+    span_adj = np.zeros(B, np.float32)
+    a_ents: list = [None] * B
+    ns_ents: list = [None] * B
+    for qi, q in enumerate(queries):
+        if not q:
+            continue
+        plan = (plans[qi] if plans is not None and plans[qi] is not None
+                else qt34_plan(index, q))
+        anchor, others, _ = plan
+        span_adj[qi] = len(q) - 1
+        base, delta, pad, ok, present = ccache.get(
+            index, "ord_c", anchor, L, doc_shards, stride)
+        delta_fmt &= ok
+        if present:
+            a_pad[qi] = pad
+        a_ents[qi] = (anchor, base, delta, present)
+        row_ents = []
+        for ki, (lemma, r) in enumerate(others[:Kn]):
+            b2, d2, p2, ok2, pr2 = ccache.get(
+                index, "ord_c", lemma, L, doc_shards, stride)
+            delta_fmt &= ok2
+            ns_r[qi, ki] = r
+            if pr2:
+                ns_pad[qi, ki] = p2
+            row_ents.append((lemma, b2, d2, pr2))
+        ns_ents[qi] = row_ents
+        idf_sum[qi] = sum(lex.idf(l) for l in q)
+    stub = QT34Batch(None, None, ns_r, idf_sum, span_adj, stride)
+    tail = (jnp.asarray(ns_r), jnp.asarray(idf_sum), jnp.asarray(span_adj))
+    if delta_fmt:
+        nb = L // BLK
+        a_base = np.zeros((B, nb), np.int32)
+        a_delta = np.zeros((B, L), np.uint16)
+        ns_base = np.zeros((B, Kn, nb), np.int32)
+        ns_delta = np.zeros((B, Kn, L), np.uint16)
+        for qi in range(B):
+            if a_ents[qi] is not None and a_ents[qi][3]:
+                a_base[qi] = a_ents[qi][1]
+                a_delta[qi] = a_ents[qi][2]
+            for ki, (_, b2, d2, pr2) in enumerate(ns_ents[qi] or ()):
+                if pr2:
+                    ns_base[qi, ki] = b2
+                    ns_delta[qi, ki] = d2
+        args = (jnp.asarray(a_base), jnp.asarray(a_delta), jnp.asarray(a_pad),
+                jnp.asarray(ns_base), jnp.asarray(ns_delta),
+                jnp.asarray(ns_pad)) + tail
+        return "qt34_delta", args, stub
+
+    def raw_row(lemma):
+        if cache is not None:
+            return cache.get(index, "ord", lemma, L, doc_shards, stride)
+        return pack_ord_key_rows(index, lemma, L, doc_shards, stride)
+
+    a_g = np.full((B, L), SENTINEL, np.int32)
+    ns_g = np.full((B, Kn, L), SENTINEL, np.int32)
+    for qi in range(B):
+        if a_ents[qi] is not None and a_ents[qi][3]:
+            g_row, pres = raw_row(a_ents[qi][0])
+            if pres:
+                a_g[qi] = g_row
+        for ki, (lemma, _, _, pr2) in enumerate(ns_ents[qi] or ()):
+            if pr2:
+                g_row, pres = raw_row(lemma)
+                if pres:
+                    ns_g[qi, ki] = g_row
+    return "qt34_offsets", (jnp.asarray(a_g), jnp.asarray(ns_g)) + tail, stub
 
 
 def assemble_qt5_compressed(index, queries, L, Kn=3, Ks=3, doc_shards=1,

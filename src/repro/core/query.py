@@ -155,6 +155,33 @@ def qt5_plan(index, lemma_ids: list[int]):
     return anchor, others, sorted(mult_st.items()), counts
 
 
+def qt34_plan(index, lemma_ids: list[int]):
+    """The QT3/QT4 ordinary-window decomposition shared by the CPU engine
+    (``search.ProximitySearchEngine._ordinary_window``), the device packer
+    (``jax_search.pack_qt34_batch``) and the serving router — one copy so
+    the compiled and scalar paths cannot drift (the ``qt5_plan``
+    precedent). Returns (anchor, others, counts): anchor = the most
+    frequent lemma (smallest FL-number, the uniform anchor rule of
+    DESIGN.md §9); others = [(lemma, multiplicity), ...] window
+    constraints — the anchor itself first when its multiplicity > 1,
+    then the remaining lemmas ascending by FL; counts = live ordinary
+    posting counts per distinct lemma (what the serving router sizes the
+    L-bucket by)."""
+    ids = list(lemma_ids)
+    mult: dict[int, int] = {}
+    for l in ids:
+        mult[l] = mult.get(l, 0) + 1
+    uniq = sorted(mult)
+    anchor = uniq[0]
+    others = []
+    if mult[anchor] > 1:
+        others.append((anchor, mult[anchor]))
+    for l in uniq[1:]:
+        others.append((l, mult[l]))
+    counts = {l: index.ordinary.n_postings(l) for l in uniq}
+    return anchor, others, counts
+
+
 def select_wv_keys(lemma_ids: list[int]) -> list[tuple[int, int]]:
     """QT2 pair covering: sort ascending by FL, pair consecutive lemmas;
     odd count pairs the leftover with the most frequent lemma."""

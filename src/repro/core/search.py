@@ -39,6 +39,7 @@ from repro.core.query import (
     QueryType,
     SubQuery,
     build_subqueries,
+    qt34_plan,
     qt5_plan,
     select_fst_keys,
     select_wv_keys,
@@ -229,7 +230,7 @@ class ProximitySearchEngine(_BaseEngine):
         ids = sub.lemma_ids
         if len(ids) < 3:
             # degenerate short queries: fall back to ordinary-index search
-            return self._ordinary_window(ids, meter, skip_nsw=True)
+            return self._ordinary_window(ids, meter)
         if len(ids) > self.index.max_distance:
             # paper §4: queries longer than MaxDistance are split into parts
             parts = [ids[i : i + self.index.max_distance] for i in range(0, len(ids), self.index.max_distance)]
@@ -355,26 +356,37 @@ class ProximitySearchEngine(_BaseEngine):
         return Matches(doc, start, end, _span_scores(idf_sum, start, end, m))
 
     # ---------------- QT3/QT4: ordinary index, NSW skipped ---------------
-    def _ordinary_window(self, ids: list[int], meter: ByteMeter, skip_nsw: bool) -> Matches:
-        mult = self._multiplicities(ids)
-        uniq = sorted(mult)
-        lists = {}
-        for l in uniq:
+    def _ordinary_window(self, ids: list[int], meter: ByteMeter) -> Matches:
+        """Ordinary-index window scan (QT3/QT4 and the short-QT1
+        fallback): every lemma through its ordinary posting list,
+        r-nearest-windowed around the anchor. Consumes the shared
+        ``query.qt34_plan`` — the same decomposition the device packer
+        (``jax_search.pack_qt34_batch``) and the serving router use — so
+        the scalar and compiled paths cannot drift (DESIGN.md §13)."""
+        anchor, other_plan, _ = qt34_plan(self.index, ids)
+        a_docs, a_pos = self.index.read_ordinary(anchor, meter)
+        if a_docs.size == 0:
+            return Matches()
+        anchor_g = self._g(a_docs, a_pos)
+        others = []
+        for l, r in other_plan:
+            if l == anchor:
+                others.append((anchor_g, r))
+                continue
             docs, pos = self.index.read_ordinary(l, meter)
             if docs.size == 0:
                 return Matches()
-            lists[l] = self._g(docs, pos)
-        anchor = uniq[0]
-        others = []
-        if mult[anchor] > 1:
-            others.append((lists[anchor], mult[anchor]))
-        for l in uniq:
-            if l != anchor:
-                others.append((lists[l], mult[l]))
+            others.append((self._g(docs, pos), r))
         idf_sum = sum(self.lex.idf(l) for l in ids)
         return self._window_match(
-            lists[anchor], others, self.index.max_distance, idf_sum, len(ids)
+            anchor_g, others, self.index.max_distance, idf_sum, len(ids)
         )
+
+    def _qt3(self, sub: SubQuery, meter: ByteMeter) -> Matches:
+        return self._ordinary_window(sub.lemma_ids, meter)
+
+    def _qt4(self, sub: SubQuery, meter: ByteMeter) -> Matches:
+        return self._ordinary_window(sub.lemma_ids, meter)
 
     # ---------------- QT5: NSW records ------------------------------------
     def _qt5(self, sub: SubQuery, meter: ByteMeter) -> Matches:
@@ -445,8 +457,10 @@ class ProximitySearchEngine(_BaseEngine):
             return self._qt1(sub, meter)
         if sub.qtype == QueryType.QT2:
             return self._qt2(sub, meter)
-        if sub.qtype in (QueryType.QT3, QueryType.QT4):
-            return self._ordinary_window(sub.lemma_ids, meter, skip_nsw=True)
+        if sub.qtype == QueryType.QT3:
+            return self._qt3(sub, meter)
+        if sub.qtype == QueryType.QT4:
+            return self._qt4(sub, meter)
         return self._qt5(sub, meter)
 
     def search_ids(self, lemma_ids: list[int]) -> tuple[Matches, QueryStats]:

@@ -147,7 +147,9 @@ def sample_typed_queries(
 
     * ``"qt1"`` — all stop lemmas;
     * ``"qt2"`` — all frequently used lemmas (the (w,v) serve path);
-    * ``"qt3"`` — all ordinary lemmas (served by the scalar engine);
+    * ``"qt3"`` — all ordinary lemmas (the ordinary-window serve path);
+    * ``"qt4"`` — at least one frequently used and one ordinary lemma,
+      no stop lemmas (the other ordinary-window query class);
     * ``"qt5"`` — at least one stop lemma plus non-stop lemmas (the NSW
       serve path)."""
     rng = np.random.default_rng(seed)
@@ -158,7 +160,14 @@ def sample_typed_queries(
         "qt2": lambda l: (l >= sw) & (l < fu_hi),
         "qt3": lambda l: l >= fu_hi,
     }
-    seed_pred = preds.get(qtype, lambda l: l < sw)  # qt5 seeds on stop rows
+    # mixed classes draw one sub-pool from each side of the split:
+    # qt4 = frequent + ordinary (seeded on frequent rows, the rarer
+    # side of its split in a Zipf stream), qt5 = stop + non-stop
+    split = {
+        "qt4": (preds["qt2"], lambda l: l >= fu_hi),
+        "qt5": (lambda l: l < sw, lambda l: l >= sw),
+    }
+    seed_pred = split[qtype][0] if qtype in split else preds[qtype]
     seed_rows = np.nonzero(seed_pred(table.lemma_ids))[0]
     queries: list[list[int]] = []
     guard = 0
@@ -169,15 +178,16 @@ def sample_typed_queries(
         m = (table.doc_ids == d) & (np.abs(table.positions - p) <= window)
         lems = table.lemma_ids[m]
         L = int(rng.integers(min_len, max_len + 1))
-        if qtype == "qt5":
-            st = lems[lems < sw]
-            ns = lems[lems >= sw]
-            if st.size < 1 or ns.size < 1:
+        if qtype in split:
+            pa, pb = split[qtype]
+            a = lems[pa(lems)]
+            b = lems[pb(lems)]
+            if a.size < 1 or b.size < 1:
                 continue
-            k_st = int(rng.integers(1, min(L - 1, st.size) + 1))
-            k_ns = min(L - k_st, int(ns.size))
-            q = [int(x) for x in rng.choice(st, size=k_st, replace=False)]
-            q += [int(x) for x in rng.choice(ns, size=k_ns, replace=False)]
+            k_a = int(rng.integers(1, min(L - 1, a.size) + 1))
+            k_b = min(L - k_a, int(b.size))
+            q = [int(x) for x in rng.choice(a, size=k_a, replace=False)]
+            q += [int(x) for x in rng.choice(b, size=k_b, replace=False)]
         else:
             pool = lems[preds[qtype](lems)]
             if pool.size < min_len:
@@ -193,14 +203,15 @@ def sample_mixed_queries(
     table: TokenTable,
     lex: Lexicon,
     n_queries: int,
-    kinds: tuple = ("qt1", "qt2", "qt5"),
+    kinds: tuple = ("qt1", "qt2", "qt3", "qt4", "qt5"),
     min_len: int = 3,
     max_len: int = 5,
     window: int = 9,
     seed: int = 0,
 ) -> list[list[int]]:
-    """Round-robin interleave of per-type samples — the mixed-traffic
-    shape the serving engine's query-type dispatch is built for."""
+    """Round-robin interleave of per-type samples across all five query
+    classes — the mixed-traffic shape the serving engine's query-type
+    dispatch is built for."""
     per = -(-n_queries // len(kinds))
     cols = [
         sample_typed_queries(table, lex, per, k, min_len, max_len, window, seed + i)

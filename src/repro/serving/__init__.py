@@ -1,0 +1,38 @@
+"""Serving tier: batched, bucketed proximity-search serving with a
+response-time guarantee (the paper's product), plus a continuous-batching
+LM decode loop.
+
+Public API
+----------
+
+* :class:`SearchServingEngine` — submit/drain/refresh serving over a
+  static ``ProximityIndex`` or a live ``repro.index.SegmentedIndex``.
+  One drain dispatches every query type of the paper (QT1-QT5) to a
+  compiled, mesh-sharded serve step (DESIGN.md §12-§13); shapes the
+  static steps cannot express fall back to the scalar reference engine,
+  so results are always exact.
+* :class:`PackedPostingCache` — LRU memo of the padded per-key device
+  rows (and their block-delta16 compressed twins) that packing a batch
+  assembles from, invalidated by snapshot identity (DESIGN.md §11).
+* :class:`LMContinuousBatcher` — slot-based continuous batching for LM
+  decode (vLLM-style admission).
+
+``python -m pydoc repro.serving.engine`` / ``repro.serving.pack_cache``
+render the full reference.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    LMContinuousBatcher,
+    SearchRequest,
+    SearchResponse,
+    SearchServingEngine,
+)
+from repro.serving.pack_cache import PackedPostingCache  # noqa: F401
+
+__all__ = [
+    "LMContinuousBatcher",
+    "PackedPostingCache",
+    "SearchRequest",
+    "SearchResponse",
+    "SearchServingEngine",
+]

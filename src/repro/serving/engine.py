@@ -23,10 +23,12 @@ import numpy as np
 from repro.core.jax_search import (
     assemble_qt1_compressed,
     assemble_qt2_compressed,
+    assemble_qt34_compressed,
     assemble_qt5_compressed,
     batch_size_bucket,
     compress_qt1_batch,
     compress_qt2_batch,
+    compress_qt34_batch,
     compress_qt5_batch,
     decode_results,
     make_qt1_serve_step,
@@ -35,7 +37,9 @@ from repro.core.jax_search import (
     ordered_wv_keys,
     pack_qt1_batch,
     pack_qt2_batch,
+    pack_qt34_batch,
     pack_qt5_batch,
+    qt34_plan,
     qt5_plan,
 )
 from repro.core.lexicon import UNKNOWN_FL
@@ -77,15 +81,17 @@ class SearchServingEngine:
     the compiled serve steps are reused — only the host-side packing sees
     the new postings).
 
-    Query-type dispatch (DESIGN.md §12): a single drain routes each
+    Query-type dispatch (DESIGN.md §12-§13): a single drain routes each
     request by its lemma classes — QT1 to the (f,s,t) serve step, QT2 to
-    the (w,v) interval-join step, QT5 to the NSW step — grouped per
-    (path, L-bucket) and padded to the power-of-two batch ladder, so the
-    response-time guarantee is uniform across query types instead of
-    fast-for-QT1-only. QT3/QT4 (ordinary-index scans without additional
-    keys) and degenerate shapes (short/overlong queries, key counts
-    beyond the static K, multiplicities beyond r_max) take the scalar
-    CPU engine; responses come back in submission order.
+    the (w,v) interval-join step, QT3/QT4 to the ordinary-window step,
+    QT5 to the NSW step — grouped per (path, L-bucket) and padded to the
+    power-of-two batch ladder, so the response-time guarantee is uniform
+    across every query type of the paper. Only shapes the static-shape
+    steps cannot express (short/overlong queries, key counts beyond the
+    static K, multiplicities beyond r_max, posting lists beyond the
+    largest L-bucket) take the scalar CPU engine; the full route ×
+    payload × fallback matrix is the dispatch-matrix table in
+    DESIGN.md §13. Responses come back in submission order.
 
     Hot-path machinery (DESIGN.md §11-§12):
 
@@ -122,6 +128,7 @@ class SearchServingEngine:
         k_wv: int = 3,
         k_ns: int = 3,
         k_st: int = 3,
+        k_ord: int = 4,
         r_max: int = 4,
     ):
         self._source = index if hasattr(index, "snapshot") else None
@@ -143,6 +150,7 @@ class SearchServingEngine:
         self.k_wv = k_wv
         self.k_ns = k_ns
         self.k_st = k_st
+        self.k_ord = k_ord
         self.r_max = r_max
         self.pack_cache = (
             PackedPostingCache(max_entries=cache_entries, max_bytes=cache_bytes)
@@ -187,7 +195,8 @@ class SearchServingEngine:
         self.stats = {"batches": 0, "requests": 0, "refreshes": 0,
                       "compressed_batches": 0, "offset_fallbacks": 0,
                       "bucket_hist": {b: 0 for b in self.buckets},
-                      "paths": {"qt1": 0, "qt2": 0, "qt5": 0, "cpu": 0},
+                      "paths": {"qt1": 0, "qt2": 0, "qt34": 0, "qt5": 0,
+                                "cpu": 0},
                       "pack_cache": {}, "compressed_cache": {}}
 
     def _step(self, kind: str):
@@ -210,26 +219,37 @@ class SearchServingEngine:
         return step
 
     def refresh(self) -> None:
-        """Swap in the indexer's latest published snapshot (no-op for a
-        static ProximityIndex). Route memoization is dropped here; the
-        row caches invalidate themselves on the first lookup against the
-        new snapshot (entries are keyed by snapshot identity, and
-        add-only refreshes retain untouched keys)."""
+        """Pick up the indexer's latest published snapshot.
+
+        A no-op when the engine serves a static ``ProximityIndex``; for a
+        ``repro.index.SegmentedIndex`` source this swaps in the newest
+        immutable ``SegmentedView``, making documents added or deleted
+        since the previous refresh visible to subsequent drains. Already
+        in-flight drains keep the snapshot they pinned. The compiled
+        per-bucket serve steps are reused across refreshes (only the
+        host-side packing sees the new postings); route memoization is
+        dropped lazily, and the row caches invalidate themselves on the
+        first lookup against the new snapshot — entries are keyed by
+        snapshot identity, and add-only refreshes retain untouched keys
+        (DESIGN.md §12)."""
         if self._source is not None:
             self.index = self._source.snapshot()
             self.stats["refreshes"] += 1
 
     # -- routing -----------------------------------------------------------
-    def _ladder(self, longest: int) -> int:
+    def _ladder(self, longest: int) -> int | None:
         # with doc_shards > 1 each range-partitioned shard segment holds
         # only L / doc_shards slots, and a doc-skewed key can land all its
         # postings in one segment: size conservatively for the worst-case
-        # skew so the packers never silently truncate below the ladder cap
+        # skew so the packers never silently truncate below the ladder cap.
+        # None when even the largest bucket cannot hold the row — the
+        # packers would silently truncate it, so the caller must route to
+        # the scalar engine instead
         longest *= self.doc_shards
         for cand in self.buckets:
             if longest <= cand:
                 return cand
-        return self.buckets[-1]
+        return None
 
     def _route(self, index, lemma_ids) -> tuple:
         """(path, bucket, plan) for one request: path is the compiled
@@ -267,7 +287,8 @@ class SearchServingEngine:
             for key in keys:
                 if key in index.fst:
                     longest = max(longest, index.fst.n_postings(key))
-            return ("qt1", self._ladder(longest), keys)
+            bucket = self._ladder(longest)
+            return ("qt1", bucket, keys) if bucket else ("cpu", None, None)
         if qtype == QueryType.QT2:
             # sharded QT2 stays on the CPU: the interval join's
             # 2*MaxDistance window can reach across a doc (and therefore
@@ -279,7 +300,8 @@ class SearchServingEngine:
             if len(select_wv_keys(ids)) > self.k_wv:
                 return ("cpu", None, None)
             ordered, longest = ordered_wv_keys(index, ids)
-            return ("qt2", self._ladder(longest), ordered)
+            bucket = self._ladder(longest)
+            return ("qt2", bucket, ordered) if bucket else ("cpu", None, None)
         if qtype == QueryType.QT5:
             if index.nsw is None:
                 return ("cpu", None, None)
@@ -296,21 +318,49 @@ class SearchServingEngine:
                 return ("cpu", None, None)
             longest = max(counts[anchor],
                           max((counts[l] for l, _ in others), default=0))
-            return ("qt5", self._ladder(longest), plan)
-        return ("cpu", None, None)  # QT3/QT4: ordinary-index window scans
+            bucket = self._ladder(longest)
+            return ("qt5", bucket, plan) if bucket else ("cpu", None, None)
+        # QT3/QT4: ordinary-index window scans through the shared
+        # qt34_join — computationally identical, so one route serves both
+        if index.ordinary is None:
+            return ("cpu", None, None)
+        plan = qt34_plan(index, ids)
+        _, others, counts = plan
+        if len(others) > self.k_ord or any(r > self.r_max for _, r in others):
+            return ("cpu", None, None)
+        bucket = self._ladder(max(counts.values()))
+        return ("qt34", bucket, plan) if bucket else ("cpu", None, None)
 
     def submit(self, lemma_ids) -> None:
+        """Queue one search request (a list of lemma ids, i.e. one
+        sub-query of ``core.query.build_subqueries``) for the next
+        :meth:`drain`.
+
+        Thread-safe and non-blocking: requests only accumulate here —
+        no packing, classification or device work happens until the
+        batcher cuts a batch. An empty list is answered with an empty
+        result set; unknown lemmas (``UNKNOWN_FL``) route to the scalar
+        engine, which resolves them to no matches."""
         req = SearchRequest(list(lemma_ids))
         with self._queue_lock:
             self._queue.append(req)
 
     def drain(self) -> list[SearchResponse]:
-        """Serve everything queued, returning responses in submission
-        order. The snapshot is pinned once for the whole drain; each
-        request's (path, bucket) is computed once (memoized per lemma-id
-        tuple per snapshot), the queue is consumed in one pass, and each
-        (path, bucket) group is served in max_batch-sized chunks, largest
-        group first."""
+        """Serve everything queued, returning one :class:`SearchResponse`
+        per request **in submission order**.
+
+        The snapshot is pinned once for the whole drain, so every batch
+        sees one consistent view even while the indexer refreshes
+        concurrently. Each request is classified QT1-QT5 and routed per
+        the dispatch matrix (DESIGN.md §13): QT1 to the (f,s,t) step,
+        QT2 to the (w,v) interval-join step, QT3/QT4 to the
+        ordinary-window step, QT5 to the NSW step — grouped per
+        (path, L-bucket), padded to the power-of-two batch ladder and
+        served largest group first in ``max_batch``-sized chunks;
+        inexpressible shapes take the scalar CPU engine. Routing is
+        memoized per lemma-id tuple per snapshot; ``stats["paths"]``
+        counts the split. Each response carries its serve path, bucket,
+        batch size and wall-clock batch latency."""
         if not self._queue:
             return []
         index = self.index
@@ -373,6 +423,9 @@ class SearchServingEngine:
         if path == "qt2":
             return (assemble_qt2_compressed, pack_qt2_batch,
                     compress_qt2_batch, "qt2_", {"K": self.k_wv})
+        if path == "qt34":
+            return (assemble_qt34_compressed, pack_qt34_batch,
+                    compress_qt34_batch, "qt34_", {"Kn": self.k_ord})
         return (assemble_qt5_compressed, pack_qt5_batch,
                 compress_qt5_batch, "qt5_", {"Kn": self.k_ns, "Ks": self.k_st})
 

@@ -13,7 +13,9 @@ Row kinds (one cache instance can hold any mix; entries are keyed by
 
 * ``"fst"`` — (g, lo, hi) rows of one (f,s,t) key (QT1);
 * ``"wv"``  — (lo, hi) interval rows of one (w,v) key (QT2);
-* ``"ord"`` — the g row of one lemma's ordinary postings (QT5 streams);
+* ``"ord"`` — the g row of one lemma's ordinary postings, shared by the
+  QT3/QT4 ordinary-window path and the QT5 anchor/non-stop streams: a
+  lemma hot on either path warms both (DESIGN.md §13);
 * ``"nsw"`` — (cnt, ext) NSW aggregates of one (anchor, stop) pair (QT5);
 * ``"fst_c" / "wv_c" / "ord_c" / "nsw_c"`` — the block-delta16-compressed
   form of the same rows (base, delta16, uint8 side channels, delta_ok).
@@ -116,7 +118,15 @@ class PackedPostingCache:
 
     # -- lookups ----------------------------------------------------------
     def get_rows(self, index, key, L: int, doc_shards: int = 1, stride: int | None = None):
-        """(f,s,t) rows — the original QT1 entry point (kind "fst")."""
+        """Padded ``(g, lo, hi, present)`` device rows of one (f,s,t) key.
+
+        The original QT1 entry point — shorthand for
+        ``get(index, "fst", key, L, doc_shards, stride)``; see
+        :meth:`get` for the lookup/invalidation contract. ``key`` is a
+        ``(f, s, t)`` lemma-id triple; the three ``(L,)`` int32 rows are
+        read-only and shared across batches, and ``present`` is False
+        when the key does not exist in the snapshot (the rows are then a
+        shared all-SENTINEL padding set)."""
         return self.get(index, "fst", key, L, doc_shards, stride)
 
     def get(self, index, kind: str, key, L: int, doc_shards: int = 1,

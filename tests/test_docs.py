@@ -1,0 +1,111 @@
+"""Docs-consistency checks (the CI docs step): DESIGN.md section
+references in source comments must resolve to real sections, README
+commands must point at real entrypoints, the §13 dispatch-matrix table
+must cover every query type, and the tracked bench report must cover
+every dispatch route. Pure-stdlib so the CI lint job can run it without
+installing jax."""
+
+import json
+import re
+import shlex
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _design_sections() -> set[int]:
+    text = (REPO / "DESIGN.md").read_text()
+    return {int(n) for n in re.findall(r"^## §(\d+)\b", text, re.M)}
+
+
+def test_design_sections_contiguous():
+    sections = _design_sections()
+    assert sections, "DESIGN.md has no '## §N' sections"
+    assert sections == set(range(1, max(sections) + 1)), sections
+
+
+def test_design_refs_in_source_resolve():
+    """Every `DESIGN.md §N` (incl. `§A-§B` / `§A/§B` forms) written in a
+    source comment or docstring names a section that actually exists —
+    dangling references rot fastest exactly where they are most relied
+    on."""
+    sections = _design_sections()
+    bad = []
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        for path in sorted((REPO / sub).rglob("*.py")):
+            for ln, line in enumerate(path.read_text().splitlines(), 1):
+                if "DESIGN.md" not in line:
+                    continue
+                tail = line.split("DESIGN.md", 1)[1]
+                for ref in re.findall(r"§(\d+)", tail):
+                    if int(ref) not in sections:
+                        bad.append((str(path.relative_to(REPO)), ln, f"§{ref}"))
+    assert not bad, f"dangling DESIGN.md references: {bad}"
+
+
+def _readme_commands() -> list[str]:
+    text = (REPO / "README.md").read_text()
+    cmds = []
+    for block in re.findall(r"```bash\n(.*?)```", text, re.S):
+        for line in block.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                cmds.append(line)
+    return cmds
+
+
+def test_readme_exists_with_required_commands():
+    text = (REPO / "README.md").read_text()
+    assert "PYTHONPATH=src python -m pytest -x -q" in text  # the tier-1 command
+    assert "BENCH_serve.json" in text  # how to regenerate the bench report
+    assert "DESIGN.md" in text and "PAPER.md" in text
+
+
+def test_readme_commands_smoke_parse():
+    """Every command in a README ```bash block must invoke a script that
+    exists (or a `python -m` module target) — a README whose quickstart
+    400s is worse than none."""
+    cmds = _readme_commands()
+    assert cmds, "README has no bash code blocks"
+    for cmd in cmds:
+        argv = shlex.split(cmd)
+        while argv and re.fullmatch(r"[A-Z_]+=\S*", argv[0]):
+            argv.pop(0)  # env assignments like PYTHONPATH=src:.
+        if argv[0] == "pip":
+            continue
+        assert argv[0] == "python", cmd
+        if argv[1] == "-m":
+            mod = argv[2]
+            assert mod in ("pytest", "pydoc") or (
+                REPO / "src" / Path(*mod.split("."))).exists(), cmd
+        else:
+            assert (REPO / argv[1]).exists(), cmd
+
+
+def test_dispatch_matrix_covers_all_query_types():
+    """DESIGN.md §13's dispatch-matrix table (the replacement for the
+    stale prose that used to live in serving/engine.py) must keep one
+    row per query type of the paper."""
+    text = (REPO / "DESIGN.md").read_text()
+    s13 = text.split("## §13", 1)[1]
+    table_rows = [l for l in s13.splitlines() if l.startswith("|")]
+    assert len(table_rows) >= 7  # header + separator + QT1-5 rows
+    body = "\n".join(table_rows)
+    for qt in ("QT1", "QT2", "QT3", "QT4", "QT5"):
+        assert re.search(rf"^\| {qt} ", body, re.M), f"no matrix row for {qt}"
+    for route in ("`qt1`", "`qt2`", "`qt34`", "`qt5`"):
+        assert route in body, f"no route column entry {route}"
+
+
+def test_tracked_bench_report_covers_dispatch_routes():
+    """BENCH_serve.json (regenerated per PR) must keep cold/warm rows
+    for every compiled dispatch route plus the mixed drain — the CI
+    bench step re-checks this on a freshly generated file."""
+    payload = json.loads((REPO / "BENCH_serve.json").read_text())
+    names = {r["name"] for r in payload["rows"]}
+    for want in ("drain_qt2_", "drain_qt3_", "drain_qt4_", "drain_qt5_",
+                 "drain_mixed_"):
+        assert any(want in n for n in names), (want, sorted(names))
+    typed = payload["reports"]["serve"]["drain_typed"]
+    for key in ("qt3", "qt4", "qt3_compressed", "qt4_compressed"):
+        assert {"cold", "warm"} <= typed[key].keys(), key

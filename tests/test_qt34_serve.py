@@ -1,0 +1,218 @@
+"""Compiled QT3/QT4 ordinary-window serve path (DESIGN.md §13): the
+device join must match the CPU reference engine exactly — over static
+and segmented (post-compaction) indexes, across all three payload
+formats, through the per-key compressed-row cache, and the dispatch
+matrix's fallback conditions must route (only) inexpressible shapes to
+the scalar engine."""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.jax_search import (
+    compress_qt34_batch,
+    decode_results,
+    make_wv_serve_step,
+    pack_qt34_batch,
+)
+from repro.core.query import QueryType, classify, qt34_plan
+from repro.core.search import ProximitySearchEngine
+from repro.data.corpus import generate_corpus, sample_mixed_queries, sample_typed_queries
+from repro.index import SegmentedIndex
+from repro.launch.mesh import make_mesh
+from repro.serving.engine import SearchServingEngine
+
+D = 5
+L = 512
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=80, mean_doc_len=70, vocab_size=500, seed=11)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    idx = build_index(table, lex, max_distance=D)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    queries = {
+        k: sample_typed_queries(table, lex, 10, k, window=D, seed=3)
+        for k in ("qt1", "qt2", "qt3", "qt4", "qt5")
+    }
+    return table, lex, idx, mesh, queries
+
+
+def _cpu_sets(idx, qs):
+    eng = ProximitySearchEngine(idx, top_k=100_000, equalize_mode="bulk")
+    out = []
+    for q in qs:
+        res, _ = eng.search_ids(q)
+        out.append(set(zip(res.doc.tolist(), res.start.tolist(), res.end.tolist())))
+    return out
+
+
+def _resp_set(r):
+    return set(zip(r.results["doc"].tolist(), r.results["start"].tolist(),
+                   r.results["end"].tolist()))
+
+
+@pytest.mark.parametrize("kind", ["qt3", "qt4"])
+@pytest.mark.parametrize("payload", ["raw", "delta", "offsets"])
+def test_device_qt34_matches_reference(world, kind, payload):
+    table, lex, idx, mesh, queries = world
+    qs = queries[kind]
+    want_type = QueryType.QT3 if kind == "qt3" else QueryType.QT4
+    assert all(classify(q, lex) == want_type for q in qs)
+    batch = pack_qt34_batch(idx, qs, L=L, Kn=4)
+    step = make_wv_serve_step(mesh, "qt34", top_k=256, payload=payload,
+                              max_distance=D, r_max=4)
+    args = (compress_qt34_batch(batch, delta_g=True) if payload == "delta"
+            else batch.device_args())
+    decoded = decode_results(batch, *step(*args))
+    got = [
+        set(zip(decoded[i]["doc"].tolist(), decoded[i]["start"].tolist(),
+                decoded[i]["end"].tolist()))
+        for i in range(len(qs))
+    ]
+    for qi, (g, w) in enumerate(zip(got, _cpu_sets(idx, qs))):
+        assert g == w, (kind, payload, qi, qs[qi], sorted(g ^ w)[:5])
+
+
+def test_qt34_no_longer_counts_as_cpu(world):
+    """The dispatch-matrix regression of this layer: expressible QT3 and
+    QT4 queries must route to the compiled "qt34" path — a reappearing
+    `cpu` count here means the serve tier lost its last-query-class
+    coverage (the exact tail the paper's guarantee is about)."""
+    table, lex, idx, mesh, queries = world
+    qs = queries["qt3"][:8] + queries["qt4"][:8]
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    for q in qs:
+        eng.submit(q)
+    resp = eng.drain()
+    assert [r.path for r in resp] == ["qt34"] * len(qs)
+    assert eng.stats["paths"]["qt34"] == len(qs)
+    assert eng.stats["paths"]["cpu"] == 0
+
+
+def test_five_type_mixed_drain_submission_order(world):
+    """One drain over all five query classes: responses stay in
+    submission order (the slot i response answers the slot i request),
+    every compiled path is exercised, and each response matches the CPU
+    reference."""
+    table, lex, idx, mesh, queries = world
+    mixed = [q for k in ("qt1", "qt2", "qt3", "qt4", "qt5") for q in queries[k][:5]]
+    # interleave so grouped serving must scatter results back by slot
+    order = np.argsort(np.arange(len(mixed)) % 5, kind="stable")
+    mixed = [mixed[i] for i in order]
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    for q in mixed:
+        eng.submit(q)
+    resp = eng.drain()
+    assert len(resp) == len(mixed)
+    want = _cpu_sets(idx, mixed)
+    for q, r, w in zip(mixed, resp, want):
+        assert _resp_set(r) == w, (q, r.path, sorted(_resp_set(r) ^ w)[:5])
+    paths = eng.stats["paths"]
+    assert paths["qt1"] >= 5 and paths["qt2"] == 5 and paths["qt5"] == 5
+    assert paths["qt34"] == 10  # both QT3 and QT4 slices
+    assert paths["cpu"] == 0
+
+
+@pytest.mark.parametrize("use_ccache", [True, False])
+def test_qt34_compressed_matches_uncompressed(world, use_ccache):
+    table, lex, idx, mesh, queries = world
+    qs = queries["qt3"][:6] + queries["qt4"][:6]
+    base = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    comp = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8,
+                               top_k=256, compressed=True,
+                               use_compressed_cache=use_ccache)
+    for round_ in range(2):  # second round serves from the row caches
+        for q in qs:
+            base.submit(q)
+            comp.submit(q)
+        got_b = [_resp_set(r) for r in base.drain()]
+        got_c = [_resp_set(r) for r in comp.drain()]
+        assert got_b == got_c, round_
+    assert comp.stats["compressed_batches"] > 0
+    if use_ccache:
+        st = comp.stats["compressed_cache"]
+        assert st["hits"] > 0 and st["misses"] > 0
+
+
+def test_qt34_fallback_conditions(world):
+    """Only inexpressible shapes take the scalar engine: more distinct
+    lemmas than k_ord, a multiplicity beyond r_max, or a posting list
+    longer than the largest L-bucket — and they still match it, because
+    they *are* it."""
+    table, lex, idx, mesh, queries = world
+    fu_hi = lex.sw_count + lex.fu_count
+    many = [int(l) for l in range(fu_hi, fu_hi + 6)]  # 5 others > k_ord=4
+    heavy = [int(queries["qt3"][0][0])] * 6  # multiplicity 6 > r_max=4
+    assert classify(many, lex) == QueryType.QT3
+    assert classify(heavy, lex) == QueryType.QT3
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    for q in (many, heavy):
+        eng.submit(q)
+    resp = eng.drain()
+    want = _cpu_sets(idx, [many, heavy])
+    for r, w in zip(resp, want):
+        assert r.path == "cpu" and _resp_set(r) == w
+    # a QT4 anchored on a frequently-used lemma whose ordinary posting
+    # list exceeds every bucket is likewise inexpressible
+    tiny = SearchServingEngine(idx, mesh, buckets=(16,), max_batch=8, top_k=256)
+    q4 = queries["qt4"][0]
+    assert max(qt34_plan(idx, q4)[2].values()) > 16
+    tiny.submit(q4)
+    (r,) = tiny.drain()
+    assert r.path == "cpu"
+    assert _resp_set(r) == _cpu_sets(idx, [q4])[0]
+
+
+def test_qt34_repeated_lemma_multiplicities(world):
+    """A duplicated lemma adds an r-nearest constraint (r > 1) on its
+    own row — including the anchor re-windowing its own posting row."""
+    table, lex, idx, mesh, queries = world
+    qs = []
+    for q in queries["qt3"] + queries["qt4"]:
+        plan_anchor = qt34_plan(idx, q)[0]
+        qs.append(q + [plan_anchor])  # duplicate the anchor
+        qs.append(q + [int(q[-1])])  # duplicate a non-anchor lemma
+    qs = [q for q in qs if classify(q, lex) in (QueryType.QT3, QueryType.QT4)][:12]
+    # k_ord=6: a duplicated anchor on a 5-distinct-lemma query carries 5
+    # window constraints, one past the default K — keep it on-device here
+    eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8,
+                              top_k=256, k_ord=6)
+    for q in qs:
+        eng.submit(q)
+    resp = eng.drain()
+    want = _cpu_sets(idx, qs)
+    for q, r, w in zip(qs, resp, want):
+        assert _resp_set(r) == w, (q, r.path, sorted(_resp_set(r) ^ w)[:5])
+    assert eng.stats["paths"]["cpu"] == 0
+
+
+def test_qt34_segmented_post_compaction(world):
+    """QT3/QT4 dispatch over a segmented snapshot that went through
+    deletes and a forced major compaction must match a CPU engine over
+    the same snapshot — uncompressed and compressed."""
+    table, lex, idx, mesh, queries = world
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=16)
+    for d in table.to_doc_lists():
+        seg.add_document(d)
+    seg.refresh()
+    seg.delete_document(7)
+    seg.delete_document(23)
+    seg.compact(force=True)
+    view = seg.refresh()
+    qs = queries["qt3"][:6] + queries["qt4"][:6]
+    eng = SearchServingEngine(seg, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
+    comp = SearchServingEngine(seg, mesh, buckets=(256, 1024), max_batch=8,
+                               top_k=256, compressed=True)
+    for q in qs:
+        eng.submit(q)
+        comp.submit(q)
+    got = [_resp_set(r) for r in eng.drain()]
+    got_c = [_resp_set(r) for r in comp.drain()]
+    want = _cpu_sets(view, qs)
+    assert got == want
+    assert got_c == want
+    served = {doc for s in got for doc, _, _ in s}
+    assert 7 not in served and 23 not in served

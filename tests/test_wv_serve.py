@@ -41,7 +41,7 @@ def world():
     mesh = make_mesh((1, 1), ("data", "model"))
     queries = {
         k: sample_typed_queries(table, lex, 10, k, window=D, seed=3)
-        for k in ("qt1", "qt2", "qt3", "qt5")
+        for k in ("qt1", "qt2", "qt3", "qt4", "qt5")
     }
     return table, lex, idx, mesh, queries
 
@@ -98,9 +98,9 @@ def _resp_set(r):
 
 
 def test_mixed_drain_matches_cpu_engine(world):
-    """A single drain routes QT1/QT2/QT5 to their compiled steps and
-    QT3 to the scalar engine; responses come back in submission order
-    and match the CPU reference per request."""
+    """A single drain routes QT1/QT2/QT3/QT5 each to its compiled step;
+    responses come back in submission order and match the CPU reference
+    per request."""
     table, lex, idx, mesh, queries = world
     mixed = [q for k in ("qt1", "qt2", "qt3", "qt5") for q in queries[k][:6]]
     eng = SearchServingEngine(idx, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
@@ -113,7 +113,7 @@ def test_mixed_drain_matches_cpu_engine(world):
         assert _resp_set(r) == w, (q, r.path)
     paths = eng.stats["paths"]
     assert paths["qt1"] >= 6 and paths["qt2"] == 6 and paths["qt5"] == 6
-    assert paths["cpu"] >= 6  # the QT3 slice
+    assert paths["qt34"] == 6 and paths["cpu"] == 0  # the QT3 slice compiles now
     # second (warm-cache) drain is identical
     for q in mixed:
         eng.submit(q)
@@ -156,7 +156,7 @@ def test_segmented_post_compaction_equivalence(world):
     seg.delete_document(40)
     seg.compact(force=True)
     view = seg.refresh()
-    mixed = [q for k in ("qt1", "qt2", "qt3", "qt5") for q in queries[k][:5]]
+    mixed = [q for k in ("qt1", "qt2", "qt3", "qt4", "qt5") for q in queries[k][:5]]
     eng = SearchServingEngine(seg, mesh, buckets=(256, 1024), max_batch=8, top_k=256)
     comp = SearchServingEngine(seg, mesh, buckets=(256, 1024), max_batch=8,
                                top_k=256, compressed=True)
@@ -261,7 +261,8 @@ def test_qt5_repeated_lemma_multiplicities(world):
 
 def test_mixed_sampler_shapes(world):
     table, lex, idx, mesh, queries = world
-    mixed = sample_mixed_queries(table, lex, 12, window=D, seed=7)
-    assert len(mixed) == 12
+    mixed = sample_mixed_queries(table, lex, 15, window=D, seed=7)
+    assert len(mixed) == 15
     kinds = {classify(q, lex) for q in mixed}
-    assert {QueryType.QT1, QueryType.QT2, QueryType.QT5} <= kinds
+    assert kinds == {QueryType.QT1, QueryType.QT2, QueryType.QT3,
+                     QueryType.QT4, QueryType.QT5}
