@@ -84,13 +84,13 @@ def run(
     serve_engine = None
     if serve or serve_compressed:
         from repro.launch.mesh import make_mesh
-        from repro.serving.engine import SearchServingEngine
+        from repro.serving import SearchService, ServeConfig
 
         mesh = make_mesh((1, 1), ("data", "model"))
-        serve_engine = SearchServingEngine(
-            seg, mesh, buckets=(1024, 4096, 16384), max_batch=16, top_k=16,
+        serve_engine = SearchService(seg, mesh, ServeConfig(
+            buckets=(1024, 4096, 16384), max_batch=16, top_k=16,
             compressed=serve_compressed,
-        )
+        ))
 
     alive: list[int] = []
     t_index = 0.0

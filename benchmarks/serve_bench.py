@@ -3,8 +3,10 @@
 path around it (DESIGN.md §11) — packed-posting-cache cold vs warm
 packing, engine drains uncompressed vs warm-cache vs compressed
 (re-encode-per-drain vs per-key compressed-row cache), per-type
-cold/warm drains for every dispatch route, and five-type mixed drains
-through the query-type dispatch.
+cold/warm drains for every dispatch route, five-type mixed drains
+through the query-type dispatch, the per-route plan statistics of the
+planner layer (DESIGN.md §14), and the deadline_met_rate of a
+50 ms-budget drain through ``SearchService.submit(deadline_s=...)``.
 
 ``run()`` returns ``(rows, report)``: CSV rows for the harness and a
 nested dict that ``benchmarks/run.py --json`` writes to BENCH_serve.json
@@ -27,7 +29,7 @@ from repro.data.corpus import (
     sample_typed_queries,
 )
 from repro.launch.mesh import make_mesh
-from repro.serving.engine import SearchServingEngine
+from repro.serving import SearchService, ServeConfig
 from repro.serving.pack_cache import PackedPostingCache
 
 
@@ -122,8 +124,8 @@ def run(smoke: bool = False):
     # "compressed" is PR 2's re-encode-per-drain path (delta encoding runs
     # on every batch even at 100% pack-cache hit rate); "compressed_cached"
     # adds the per-key compressed-row cache (DESIGN.md §12)
-    mk = lambda **kw: SearchServingEngine(  # noqa: E731
-        idx, mesh, buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw
+    mk = lambda **kw: SearchService(  # noqa: E731
+        idx, mesh, ServeConfig(buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw)
     )
     variants = (
         ("uncached", mk(use_pack_cache=False)),
@@ -139,7 +141,7 @@ def run(smoke: bool = False):
         if eng.pack_cache is not None:
             d["cache_hit_rate"] = eng.pack_cache.stats["hit_rate"]
             derived += f";cache_hit_rate={d['cache_hit_rate']:.3f}"
-        if eng.compressed:
+        if eng.config.compressed:
             d["offset_fallbacks"] = eng.stats["offset_fallbacks"]
             derived += f";offset_fallbacks={d['offset_fallbacks']}"
         if eng.compressed_cache is not None:
@@ -170,8 +172,8 @@ def run(smoke: bool = False):
         didx = build_index(dtable, dlex, max_distance=5)
         dq = sample_stop_queries(dtable, dlex, n_q, window=3, seed=5)
         dqs = (dq * ((eng_B // len(dq)) + 1))[:eng_B]
-    mkd = lambda **kw: SearchServingEngine(  # noqa: E731
-        didx, mesh, buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw
+    mkd = lambda **kw: SearchService(  # noqa: E731
+        didx, mesh, ServeConfig(buckets=(eng_L,), max_batch=eng_B, top_k=16, **kw)
     )
     dvariants = (
         ("compressed_reencode", mkd(compressed=True, use_compressed_cache=False)),
@@ -248,6 +250,39 @@ def run(smoke: bool = False):
         rep["drain_mixed"]["mixed_compressed_reencode"]["us"]
         / rep["drain_mixed"]["mixed_compressed_cached"]["us"]
     )
+
+    # -- planner layer: per-route plan stats + deadline_met_rate -----------
+    # (DESIGN.md §14) The mixed cached engine exercised every dispatch
+    # route; its plan stats record the route split, the compiled
+    # executable count and how many qt34 batches rode qt5 executables
+    # (dispatch-aware batching). The deadline drain re-submits the mixed
+    # stream with a 50 ms budget on the warm engine — the met rate is
+    # the response-time guarantee as a single observable number.
+    meng = mvariants[1][1]  # mixed_cached: warm rows, all routes
+    rep["plans"] = {
+        "routes": dict(meng.stats["plans"]["routes"]),
+        "fallbacks": dict(meng.stats["plans"]["fallbacks"]),
+        "executables": meng.stats["plans"]["executables"],
+        "shared_batches": meng.stats["plans"]["shared_batches"],
+    }
+    budget_s = 0.05
+    tickets = [meng.submit(q, deadline_s=budget_s) for q in mixed]
+    meng.drain()
+    met = sum(1 for t in tickets if t.response.deadline_met)
+    met_rate = met / max(len(tickets), 1)
+    waits = [t.response.queue_wait_s for t in tickets]
+    rep["deadline"] = {
+        "budget_ms": budget_s * 1e3,
+        "met_rate": met_rate,
+        "n": len(tickets),
+        "queue_wait_p50_us": float(np.percentile(waits, 50)) * 1e6,
+    }
+    rows.append((
+        "serve/deadline_met_rate_50ms", met_rate,
+        f"met={met}/{len(tickets)};routes={len(rep['plans']['routes'])};"
+        f"executables={rep['plans']['executables']};"
+        f"shared_batches={rep['plans']['shared_batches']}",
+    ))
     return rows, rep
 
 

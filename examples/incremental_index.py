@@ -13,7 +13,7 @@ from repro.core.search import ProximitySearchEngine
 from repro.data.corpus import generate_corpus, sample_stop_queries
 from repro.index import SegmentedIndex
 from repro.launch.mesh import make_mesh
-from repro.serving.engine import SearchServingEngine
+from repro.serving import SearchService, ServeConfig
 
 
 def main() -> None:
@@ -23,7 +23,7 @@ def main() -> None:
 
     idx = SegmentedIndex(lex, max_distance=5, memtable_docs=64, tier_fanout=4)
     mesh = make_mesh((1, 1), ("data", "model"))
-    serving = SearchServingEngine(idx, mesh, buckets=(1024, 4096, 16384), top_k=8)
+    serving = SearchService(idx, mesh, ServeConfig(buckets=(1024, 4096, 16384), top_k=8))
 
     rng = np.random.default_rng(0)
     alive: list[int] = []

@@ -1,8 +1,9 @@
 """End-to-end driver (the paper's kind is serving): build a proximity
-index over a synthetic Zipf collection, then serve batched QT1 requests
-through the bucketed serving engine with latency statistics — the
-response-time-guarantee discipline of the paper realized as compiled
-per-bucket steps.
+index over a synthetic Zipf collection, then serve batched requests
+through the deadline-aware ``SearchService`` — the response-time
+guarantee of the paper realized as compiled per-bucket steps, with the
+per-query routing decision (`QueryPlan`) and the deadline verdict
+surfaced on every response (DESIGN.md §14).
 
 Run:  PYTHONPATH=src python examples/serve_search.py [--n-docs 3000] [--requests 256]
 """
@@ -15,7 +16,7 @@ import numpy as np
 from repro.core.index_builder import build_index
 from repro.data.corpus import generate_corpus, sample_mixed_queries, sample_stop_queries
 from repro.launch.mesh import make_mesh
-from repro.serving.engine import SearchServingEngine
+from repro.serving import SearchService, ServeConfig
 
 
 def main() -> None:
@@ -29,6 +30,8 @@ def main() -> None:
                     help="mixed QT1-QT5 traffic through the query-type "
                          "dispatch (DESIGN.md §13) instead of all-stop-word "
                          "QT1 queries")
+    ap.add_argument("--deadline-ms", type=float, default=50.0,
+                    help="per-request budget (<= 0 disables deadlines)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -40,19 +43,29 @@ def main() -> None:
           f"{len(index.fst.counts)} (f,s,t) keys, {len(index.wv.counts)} (w,v) keys")
 
     mesh = make_mesh((1, 1), ("data", "model"))
-    engine = SearchServingEngine(index, mesh, max_batch=64, top_k=8,
-                                 compressed=args.compressed)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
+    service = SearchService(index, mesh, ServeConfig(
+        max_batch=64, top_k=8, compressed=args.compressed,
+        default_deadline_s=deadline_s,
+    ))
 
     if args.mixed:
         queries = sample_mixed_queries(table, lex, args.requests, window=3, seed=2)
     else:
         queries = sample_stop_queries(table, lex, args.requests, window=3, seed=2)
+
+    # the planner answers routing questions without executing anything
+    plan = service.explain(queries[0])
+    print(f"\nexplain(first query): route={plan.route} step={plan.step_family} "
+          f"L-bucket={plan.bucket} payload={plan.payload} "
+          f"est_step_cost={plan.est_step_cost}")
+
     for round_name in ("cold", "warm"):  # warm: packed rows come from cache
-        for q in queries:
-            engine.submit(q)
+        tickets = [service.submit(q) for q in queries]
         t0 = time.time()
-        responses = engine.drain()
+        responses = service.drain()
         wall = time.time() - t0
+        assert all(t.done for t in tickets)
         lat = np.array([r.latency_s for r in responses])
         n_hits = sum(1 for r in responses if r.results["doc"].size > 0)
         print(f"\n[{round_name}] served {len(responses)} requests in {wall:.2f}s "
@@ -60,13 +73,23 @@ def main() -> None:
         print(f"batch latency p50={np.percentile(lat,50)*1000:.1f}ms "
               f"p99={np.percentile(lat,99)*1000:.1f}ms")
         print(f"requests with hits: {n_hits}/{len(responses)}")
-    print(f"bucket histogram: {engine.stats['bucket_hist']}")
-    print(f"batches: {engine.stats['batches']}  paths: {engine.stats['paths']}")
-    print(f"pack cache: {engine.stats['pack_cache']}")
+        if deadline_s is not None:
+            met = sum(1 for r in responses if r.deadline_met)
+            waits = np.array([r.queue_wait_s for r in responses])
+            print(f"deadline {args.deadline_ms:.0f}ms met: {met}/{len(responses)} "
+                  f"({met/len(responses):.1%}); queue wait "
+                  f"p50={np.percentile(waits,50)*1e3:.1f}ms")
+    st = service.stats
+    print(f"\nbucket histogram: {st['bucket_hist']}")
+    print(f"batches: {st['batches']}  paths: {st['paths']}")
+    print(f"plan routes: {st['plans']['routes']}  fallbacks: {st['plans']['fallbacks']}")
+    print(f"compiled executables: {st['plans']['executables']} "
+          f"(qt34-on-qt5 shared batches: {st['plans']['shared_batches']})")
+    print(f"pack cache: {st['pack_cache']}")
     if args.compressed:
-        print(f"compressed batches: {engine.stats['compressed_batches']} "
-              f"(offsets fallbacks: {engine.stats['offset_fallbacks']})")
-        print(f"compressed-row cache: {engine.stats['compressed_cache']}")
+        print(f"compressed batches: {st['compressed_batches']} "
+              f"(offsets fallbacks: {st['offset_fallbacks']})")
+        print(f"compressed-row cache: {st['compressed_cache']}")
 
 
 if __name__ == "__main__":

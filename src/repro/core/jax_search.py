@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.index_builder import ProximityIndex
-from repro.core.query import qt34_plan, qt5_plan, select_fst_keys, select_wv_keys
+from repro.core.query import qt2_plan, qt34_plan, qt5_plan, select_fst_keys
 from repro.kernels.common import SENTINEL
 
 from repro.kernels.common import shard_map_compat as _shard_map
@@ -841,23 +841,10 @@ class QT34Batch:
             self.a_g, self.ns_g, self.ns_r, self.idf_sum, self.span_adjust))
 
 
-def ordered_wv_keys(index, lemma_ids) -> tuple:
-    """select_wv_keys ordered sparsest-first by live posting count — the
-    CPU engine anchors its interval join on the smallest list, and its
-    np.argsort tie-break is reproduced by sorting the same size array the
-    same way (absent keys count 0: they sort first, and an all-padding
-    anchor yields the CPU's any-key-absent empty result). Returns
-    (ordered keys, longest posting count) — the second element is what
-    the serving router sizes the L-bucket by, so route and packer share
-    one derivation."""
-    keys = select_wv_keys(list(lemma_ids))
-    wv = index.wv
-    sizes = np.array(
-        [wv.n_postings(k) if wv is not None and k in wv else 0 for k in keys],
-        np.int64,
-    )
-    order = np.argsort(sizes)
-    return [keys[i] for i in order], int(sizes.max(initial=0))
+# the QT2 key ordering moved beside the other per-type plans in
+# core/query.py (the serving planner consumes them uniformly); the old
+# name stays importable for existing callers
+ordered_wv_keys = qt2_plan
 
 
 def pack_qt2_batch(

@@ -12,6 +12,8 @@ import itertools
 from dataclasses import dataclass
 from enum import IntEnum
 
+import numpy as np
+
 from repro.core.lemmatizer import lemmatize_text
 from repro.core.lexicon import Lexicon, LemmaType, UNKNOWN_FL
 
@@ -118,6 +120,41 @@ def select_fst_keys(lemma_ids: list[int]) -> tuple[int, list[tuple[int, int, int
         if key not in keys:
             keys.append(key)
     return f, keys
+
+
+def qt1_plan(index, lemma_ids: list[int]) -> tuple[list[tuple[int, int, int]], int]:
+    """The QT1 per-query decomposition consumed by the serving planner
+    and the device packer (the ``qt5_plan`` precedent, completing the
+    per-type plan family qt1/qt2/qt34/qt5). Returns (keys, longest):
+    keys = the (f,s,t) cover of :func:`select_fst_keys`; longest = the
+    largest live posting count among them (what the planner sizes the
+    L-bucket by — absent keys count 0)."""
+    _, keys = select_fst_keys(list(lemma_ids))
+    fst = index.fst
+    longest = 0
+    for key in keys:
+        if fst is not None and key in fst:
+            longest = max(longest, fst.n_postings(key))
+    return keys, longest
+
+
+def qt2_plan(index, lemma_ids) -> tuple[list[tuple[int, int]], int]:
+    """The QT2 per-query decomposition: :func:`select_wv_keys` ordered
+    sparsest-first by live posting count — the CPU engine anchors its
+    interval join on the smallest list, and its np.argsort tie-break is
+    reproduced by sorting the same size array the same way (absent keys
+    count 0: they sort first, and an all-padding anchor yields the CPU's
+    any-key-absent empty result). Returns (ordered keys, longest posting
+    count) — the second element is what the serving planner sizes the
+    L-bucket by, so planner and packer share one derivation."""
+    keys = select_wv_keys(list(lemma_ids))
+    wv = index.wv
+    sizes = np.array(
+        [wv.n_postings(k) if wv is not None and k in wv else 0 for k in keys],
+        np.int64,
+    )
+    order = np.argsort(sizes)
+    return [keys[i] for i in order], int(sizes.max(initial=0))
 
 
 def qt5_plan(index, lemma_ids: list[int]):

@@ -1,8 +1,9 @@
 """Serving launcher: builds a proximity index and serves batched QT1
-requests through the bucketed engine (thin CLI over serving/engine.py;
-examples/serve_search.py is the narrated walkthrough).
+requests through the deadline-aware `SearchService` (thin CLI over
+serving/service.py; examples/serve_search.py is the narrated
+walkthrough).
 
-  PYTHONPATH=src python -m repro.launch.serve --n-docs 3000 --requests 512
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 3000 --requests 512 --deadline-ms 50
 """
 
 from __future__ import annotations
@@ -15,7 +16,7 @@ import numpy as np
 from repro.core.index_builder import build_index
 from repro.data.corpus import generate_corpus, sample_stop_queries
 from repro.launch.mesh import make_mesh
-from repro.serving.engine import SearchServingEngine
+from repro.serving import SearchService, ServeConfig
 
 
 def main() -> None:
@@ -25,23 +26,35 @@ def main() -> None:
     ap.add_argument("--max-distance", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request budget; responses report deadline_met "
+                         "(<= 0 disables deadlines)")
     args = ap.parse_args()
 
     table, lex = generate_corpus(args.n_docs, mean_doc_len=160, vocab_size=40_000, seed=1)
     index = build_index(table, lex, max_distance=args.max_distance)
     mesh = make_mesh((1, 1), ("data", "model"))
-    engine = SearchServingEngine(index, mesh, max_batch=args.max_batch, top_k=args.top_k)
+    deadline_on = args.deadline_ms is not None and args.deadline_ms > 0
+    cfg = ServeConfig(
+        max_batch=args.max_batch, top_k=args.top_k,
+        default_deadline_s=args.deadline_ms / 1e3 if deadline_on else None,
+    )
+    service = SearchService(index, mesh, cfg)
     for q in sample_stop_queries(table, lex, args.requests, window=3, seed=2):
-        engine.submit(q)
+        service.submit(q)
     t0 = time.time()
-    responses = engine.drain()
+    responses = service.drain()
     wall = time.time() - t0
     lat = np.array([r.latency_s for r in responses])
     print(
         f"served {len(responses)} requests in {wall:.2f}s ({len(responses)/wall:.1f} qps); "
         f"batch p50={np.percentile(lat, 50)*1e3:.1f}ms p99={np.percentile(lat, 99)*1e3:.1f}ms; "
-        f"buckets={engine.stats['bucket_hist']}"
+        f"buckets={service.stats['bucket_hist']}"
     )
+    if deadline_on:
+        met = sum(1 for r in responses if r.deadline_met)
+        print(f"deadline {args.deadline_ms:.0f}ms: met {met}/{len(responses)} "
+              f"({met/len(responses):.1%})")
 
 
 if __name__ == "__main__":

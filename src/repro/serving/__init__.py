@@ -1,38 +1,61 @@
-"""Serving tier: batched, bucketed proximity-search serving with a
-response-time guarantee (the paper's product), plus a continuous-batching
-LM decode loop.
+"""Serving tier: deadline-aware, batched, bucketed proximity-search
+serving with a response-time guarantee (the paper's product), plus a
+continuous-batching LM decode loop.
+
+The tier is three explicit layers (DESIGN.md §14):
+
+* :mod:`repro.serving.planner` — pure per-query routing:
+  ``plan(request, snapshot, config) -> QueryPlan`` captures query type,
+  route, L-bucket, payload, estimated step cost and a machine-readable
+  ``fallback_reason`` for every scalar-route shape of the DESIGN.md §13
+  dispatch matrix;
+* :mod:`repro.serving.executors` — ``CompiledExecutor`` (serve-step
+  factories + the per-(kind, B, L) executable table, shared across
+  paths by dispatch-aware batching) and ``ScalarExecutor`` behind one
+  ``Executor`` protocol;
+* :mod:`repro.serving.service` — the :class:`SearchService` facade:
+  one :class:`ServeConfig`, ``submit(lemma_ids, deadline_s=...) ->
+  SearchTicket``, ``drain()`` resolving tickets with per-response
+  ``plan``/``deadline_met``/``queue_wait_s``, and ``explain()``.
 
 Public API
 ----------
 
-* :class:`SearchServingEngine` — submit/drain/refresh serving over a
-  static ``ProximityIndex`` or a live ``repro.index.SegmentedIndex``.
-  One drain dispatches every query type of the paper (QT1-QT5) to a
-  compiled, mesh-sharded serve step (DESIGN.md §12-§13); shapes the
-  static steps cannot express fall back to the scalar reference engine,
-  so results are always exact.
+* :class:`SearchService` / :class:`ServeConfig` / :class:`SearchTicket`
+  / :class:`SearchResponse` — the serving facade.
+* :class:`QueryPlan` — the inspectable routing decision.
+* :class:`SearchServingEngine` — **deprecated** monolithic API, kept as
+  a thin shim over ``SearchService``.
 * :class:`PackedPostingCache` — LRU memo of the padded per-key device
-  rows (and their block-delta16 compressed twins) that packing a batch
-  assembles from, invalidated by snapshot identity (DESIGN.md §11).
+  rows (and their block-delta16 compressed twins), invalidated by
+  snapshot identity (DESIGN.md §11).
 * :class:`LMContinuousBatcher` — slot-based continuous batching for LM
   decode (vLLM-style admission).
 
-``python -m pydoc repro.serving.engine`` / ``repro.serving.pack_cache``
-render the full reference.
+``python -m pydoc repro.serving.service`` / ``repro.serving.planner`` /
+``repro.serving.executors`` render the full reference.
 """
 
-from repro.serving.engine import (  # noqa: F401
-    LMContinuousBatcher,
+from repro.serving.engine import SearchServingEngine  # noqa: F401 (deprecated)
+from repro.serving.lm_batcher import LMContinuousBatcher  # noqa: F401
+from repro.serving.pack_cache import PackedPostingCache  # noqa: F401
+from repro.serving.planner import QueryPlan  # noqa: F401
+from repro.serving.service import (  # noqa: F401
     SearchRequest,
     SearchResponse,
-    SearchServingEngine,
+    SearchService,
+    SearchTicket,
+    ServeConfig,
 )
-from repro.serving.pack_cache import PackedPostingCache  # noqa: F401
 
 __all__ = [
     "LMContinuousBatcher",
     "PackedPostingCache",
+    "QueryPlan",
     "SearchRequest",
     "SearchResponse",
+    "SearchService",
     "SearchServingEngine",
+    "SearchTicket",
+    "ServeConfig",
 ]

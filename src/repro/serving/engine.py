@@ -1,115 +1,49 @@
-"""Serving runtime: batched proximity-search serving (the paper's
-product) and a continuous-batching LM decode loop.
+"""Deprecated serving entry point.
 
-Search serving (the end-to-end driver of examples/serve_search.py):
-  * requests (query strings or lemma-id lists) accumulate in a queue;
-  * the batcher cuts a batch on max_batch or max_wait, packs posting
-    lists into the bucketed device format (core/jax_search.py), runs the
-    compiled serve step and decodes results;
-  * posting lengths are bucketed to a fixed ladder so each bucket hits a
-    pre-compiled executable — the response-time guarantee is the compiled
-    step time of the bucket (paper §1: "a simple inquiry should produce a
-    response within two seconds").
+``SearchServingEngine`` was the monolithic serving engine; the serving
+tier is now three explicit layers (DESIGN.md §14) behind the
+:class:`repro.serving.service.SearchService` facade:
+
+* ``serving/planner.py`` — pure per-query routing (``QueryPlan``);
+* ``serving/executors.py`` — compiled/scalar execution behind one
+  protocol, with the shared per-(kind, B, L) executable table;
+* ``serving/service.py`` — ``SearchService`` + ``ServeConfig`` +
+  deadline-aware tickets.
+
+This module keeps the old constructor signature working as a thin shim
+over ``SearchService`` so existing callers, tests and benchmarks run
+unmodified; new code should construct ``SearchService`` directly:
+
+    from repro.serving import SearchService, ServeConfig
+    svc = SearchService(index, mesh, ServeConfig(compressed=True))
+    ticket = svc.submit(lemma_ids, deadline_s=0.05)
+    responses = svc.drain()          # ticket.response is resolved too
+    svc.explain(lemma_ids)           # the QueryPlan, without executing
 """
 
 from __future__ import annotations
 
-import threading
-import time
-from dataclasses import dataclass, field
+import warnings
 
-import numpy as np
-
-from repro.core.jax_search import (
-    assemble_qt1_compressed,
-    assemble_qt2_compressed,
-    assemble_qt34_compressed,
-    assemble_qt5_compressed,
-    batch_size_bucket,
-    compress_qt1_batch,
-    compress_qt2_batch,
-    compress_qt34_batch,
-    compress_qt5_batch,
-    decode_results,
-    make_qt1_serve_step,
-    make_qt1_serve_step_compressed,
-    make_wv_serve_step,
-    ordered_wv_keys,
-    pack_qt1_batch,
-    pack_qt2_batch,
-    pack_qt34_batch,
-    pack_qt5_batch,
-    qt34_plan,
-    qt5_plan,
+from repro.serving.lm_batcher import LMContinuousBatcher  # noqa: F401 (compat)
+from repro.serving.service import (  # noqa: F401 (compat re-exports)
+    SearchRequest,
+    SearchResponse,
+    SearchService,
+    SearchTicket,
+    ServeConfig,
 )
-from repro.core.lexicon import UNKNOWN_FL
-from repro.core.query import QueryType, classify, select_fst_keys, select_wv_keys
-from repro.serving.pack_cache import PackedPostingCache
-
-_EMPTY_RESULT = {
-    "doc": np.zeros(0, np.int64),
-    "start": np.zeros(0, np.int64),
-    "end": np.zeros(0, np.int64),
-    "score": np.zeros(0, np.float32),
-}
-
-
-@dataclass
-class SearchRequest:
-    lemma_ids: list
-    arrival: float = field(default_factory=time.perf_counter)
-
-
-@dataclass
-class SearchResponse:
-    results: dict
-    latency_s: float
-    bucket: int
-    batch_size: int
-    path: str = "qt1"
 
 
 class SearchServingEngine:
-    """Bucketed, batched proximity-search serving over a ProximityIndex
-    or a snapshot-able incremental index (``repro.index.SegmentedIndex``).
+    """Deprecated: thin delegation shim over :class:`SearchService`.
 
-    Serving always runs against an *immutable* searcher snapshot: a drain
-    pins the snapshot once, so in-flight batches see a consistent view
-    even while the indexer seals memtables and runs background merges.
-    Call ``refresh()`` to pick up the indexer's latest published snapshot
-    (documents added/deleted since the previous refresh become visible;
-    the compiled serve steps are reused — only the host-side packing sees
-    the new postings).
-
-    Query-type dispatch (DESIGN.md §12-§13): a single drain routes each
-    request by its lemma classes — QT1 to the (f,s,t) serve step, QT2 to
-    the (w,v) interval-join step, QT3/QT4 to the ordinary-window step,
-    QT5 to the NSW step — grouped per (path, L-bucket) and padded to the
-    power-of-two batch ladder, so the response-time guarantee is uniform
-    across every query type of the paper. Only shapes the static-shape
-    steps cannot express (short/overlong queries, key counts beyond the
-    static K, multiplicities beyond r_max, posting lists beyond the
-    largest L-bucket) take the scalar CPU engine; the full route ×
-    payload × fallback matrix is the dispatch-matrix table in
-    DESIGN.md §13. Responses come back in submission order.
-
-    Hot-path machinery (DESIGN.md §11-§12):
-
-    * a ``PackedPostingCache`` memoizes the padded device rows of each
-      (f,s,t) / (w,v) / ordinary / NSW key per (L, doc_shards) bucket,
-      invalidated by snapshot identity (add-only refreshes retain
-      untouched keys) — warm drains copy rows instead of re-deriving
-      them from posting reads;
-    * batch sizes are padded to a power-of-two ladder
-      (``batch_size_bucket``), so each (path, B-bucket, L-bucket) triple
-      hits one compiled executable instead of silently recompiling at
-      every new queue length;
-    * ``compressed=True`` ships block-delta16 device args (4 B/posting
-      class instead of 12), falling back per batch to the offsets-only
-      format when a 64-posting block's key span overflows uint16 — and
-      memoizes the per-key (base, delta16, offsets) triples in a second
-      ``PackedPostingCache`` so warm drains skip the O(B·K·L) host
-      re-encode entirely."""
+    Accepts the pre-§14 knob soup, folds it into a single
+    :class:`ServeConfig`, and forwards ``submit``/``drain``/``refresh``
+    plus the attribute surface old callers read (``stats``,
+    ``pack_cache``, ``compressed_cache``, ``index``, ...). Responses
+    additionally carry the new ``plan``/``deadline_met``/
+    ``queue_wait_s`` fields — old callers simply never read them."""
 
     def __init__(
         self,
@@ -131,452 +65,77 @@ class SearchServingEngine:
         k_ord: int = 4,
         r_max: int = 4,
     ):
-        self._source = index if hasattr(index, "snapshot") else None
-        self.index = index.snapshot() if self._source is not None else index
-        if compressed and getattr(self.index, "max_distance", 0) > 254:
-            # all compressed formats carry fragment bounds / NSW offsets
-            # as uint8 distances; beyond 254 they would silently clip
-            raise ValueError(
-                "compressed serving requires max_distance <= 254 "
-                f"(got {self.index.max_distance})"
-            )
-        self.mesh = mesh
-        self.buckets = tuple(sorted(buckets))
-        self.max_batch = max_batch
-        self.top_k = top_k
-        self.doc_shards = doc_shards
-        self.compressed = compressed
-        self.k_fst = k_fst
-        self.k_wv = k_wv
-        self.k_ns = k_ns
-        self.k_st = k_st
-        self.k_ord = k_ord
-        self.r_max = r_max
-        self.pack_cache = (
-            PackedPostingCache(max_entries=cache_entries, max_bytes=cache_bytes)
-            if use_pack_cache
-            else None
+        warnings.warn(
+            "SearchServingEngine is deprecated; use "
+            "repro.serving.SearchService with a ServeConfig (DESIGN.md §14)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        # per-key compressed rows derive from (and sit beside) the raw
-        # row cache; without it every warm compressed drain re-runs the
-        # O(B·K·L) host delta encoding
-        self.compressed_cache = (
-            PackedPostingCache(max_entries=cache_entries, max_bytes=cache_bytes,
-                               source=self.pack_cache)
-            if compressed and use_compressed_cache
-            else None
-        )
-        # compiled steps, one per (path, payload format); jit caches per
-        # (B, L) shape under each, and batch_size_bucket bounds how many
-        # shapes each one ever sees
-        self._steps: dict[str, object] = {}
-        self._queue: list[SearchRequest] = []
-        self._queue_lock = threading.Lock()
-        # per-snapshot lemma ids -> (path, bucket); validity is tied to
-        # the *pinned view's identity* (not to refresh() clearing it: a
-        # drain racing a refresh could otherwise re-insert a stale entry
-        # after the clear). Bounded: a high-cardinality query stream over
-        # a static index never refreshes, so the memo is cleared
-        # wholesale at the cap (rebuilding an entry is one n_postings
-        # scan per key)
-        self._route_memo: dict[tuple, tuple] = {}
-        self._route_memo_view = None
-        self._route_memo_cap = 65536
-        # scalar fallback engine, rebuilt per snapshot on first use
-        self._cpu_engine = None
-        # delta-format eligibility is static per bucket (block/shard
-        # alignment); on the cache-less compressed path it also goes
-        # sticky-False after a uint16 span overflow so persistent-
-        # overflow corpora don't pay a failed delta encoding per batch
-        # (with the compressed cache the verdict is per-key instead).
-        # Keyed per (path, bucket): one path's overflow must not demote
-        # the other paths' payloads at the same bucket
-        self._delta_ok: dict[tuple, bool] = {}
-        self.stats = {"batches": 0, "requests": 0, "refreshes": 0,
-                      "compressed_batches": 0, "offset_fallbacks": 0,
-                      "bucket_hist": {b: 0 for b in self.buckets},
-                      "paths": {"qt1": 0, "qt2": 0, "qt34": 0, "qt5": 0,
-                                "cpu": 0},
-                      "pack_cache": {}, "compressed_cache": {}}
+        self.service = SearchService(index, mesh, ServeConfig(
+            buckets=tuple(buckets), max_batch=max_batch, top_k=top_k,
+            doc_shards=doc_shards, compressed=compressed,
+            use_pack_cache=use_pack_cache,
+            use_compressed_cache=use_compressed_cache,
+            cache_entries=cache_entries, cache_bytes=cache_bytes,
+            k_fst=k_fst, k_wv=k_wv, k_ns=k_ns, k_st=k_st, k_ord=k_ord,
+            r_max=r_max,
+        ))
 
-    def _step(self, kind: str):
-        step = self._steps.get(kind)
-        if step is None:
-            d = self.index.max_distance
-            if kind == "base":
-                step = make_qt1_serve_step(self.mesh, top_k=self.top_k)
-            elif kind in ("delta", "offsets"):
-                step = make_qt1_serve_step_compressed(
-                    self.mesh, top_k=self.top_k, delta_g=(kind == "delta")
-                )
-            else:  # "qt2_raw" ... "qt5_offsets"
-                qtype, payload = kind.split("_", 1)
-                step = make_wv_serve_step(
-                    self.mesh, qtype, top_k=self.top_k, payload=payload,
-                    max_distance=d, r_max=self.r_max,
-                )
-            self._steps[kind] = step
-        return step
+    # -- the old serving protocol, delegated -------------------------------
+    def submit(self, lemma_ids) -> None:
+        self.service.submit(lemma_ids)
+
+    def drain(self):
+        return self.service.drain()
 
     def refresh(self) -> None:
-        """Pick up the indexer's latest published snapshot.
+        self.service.refresh()
 
-        A no-op when the engine serves a static ``ProximityIndex``; for a
-        ``repro.index.SegmentedIndex`` source this swaps in the newest
-        immutable ``SegmentedView``, making documents added or deleted
-        since the previous refresh visible to subsequent drains. Already
-        in-flight drains keep the snapshot they pinned. The compiled
-        per-bucket serve steps are reused across refreshes (only the
-        host-side packing sees the new postings); route memoization is
-        dropped lazily, and the row caches invalidate themselves on the
-        first lookup against the new snapshot — entries are keyed by
-        snapshot identity, and add-only refreshes retain untouched keys
-        (DESIGN.md §12)."""
-        if self._source is not None:
-            self.index = self._source.snapshot()
-            self.stats["refreshes"] += 1
+    def explain(self, lemma_ids):
+        return self.service.explain(lemma_ids)
 
-    # -- routing -----------------------------------------------------------
-    def _ladder(self, longest: int) -> int | None:
-        # with doc_shards > 1 each range-partitioned shard segment holds
-        # only L / doc_shards slots, and a doc-skewed key can land all its
-        # postings in one segment: size conservatively for the worst-case
-        # skew so the packers never silently truncate below the ladder cap.
-        # None when even the largest bucket cannot hold the row — the
-        # packers would silently truncate it, so the caller must route to
-        # the scalar engine instead
-        longest *= self.doc_shards
-        for cand in self.buckets:
-            if longest <= cand:
-                return cand
-        return None
+    # -- the old attribute surface -----------------------------------------
+    @property
+    def index(self):
+        return self.service.index
 
-    def _route(self, index, lemma_ids) -> tuple:
-        """(path, bucket, plan) for one request: path is the compiled
-        step family ("qt1" / "qt2" / "qt5") or "cpu" for shapes the
-        compiled steps cannot express (the scalar engine is the
-        correctness backstop, so routing is conservative). plan carries
-        the memoized key selection — fst keys / size-ordered (w,v) keys /
-        the qt5_plan tuple — so warm drains skip re-deriving it in the
-        packers."""
-        if index is not self._route_memo_view:
-            self._route_memo = {}
-            self._route_memo_view = index
-            self._cpu_engine = None
-        memo_key = tuple(lemma_ids)
-        r = self._route_memo.get(memo_key)
-        if r is not None:
-            return r
-        r = self._classify_route(index, list(lemma_ids))
-        if len(self._route_memo) >= self._route_memo_cap:
-            self._route_memo.clear()
-        self._route_memo[memo_key] = r
-        return r
+    @property
+    def stats(self) -> dict:
+        return self.service.stats
 
-    def _classify_route(self, index, ids) -> tuple:
-        if not ids or any(l == UNKNOWN_FL for l in ids):
-            return ("cpu", None, None) if ids else ("empty", None, None)
-        qtype = classify(ids, index.lexicon)
-        if qtype == QueryType.QT1:
-            if index.fst is None or len(ids) < 3 or len(ids) > index.max_distance:
-                return ("cpu", None, None)  # CPU degenerate/split paths
-            _, keys = select_fst_keys(ids)
-            if len(keys) > self.k_fst:
-                return ("cpu", None, None)
-            longest = 0
-            for key in keys:
-                if key in index.fst:
-                    longest = max(longest, index.fst.n_postings(key))
-            bucket = self._ladder(longest)
-            return ("qt1", bucket, keys) if bucket else ("cpu", None, None)
-        if qtype == QueryType.QT2:
-            # sharded QT2 stays on the CPU: the interval join's
-            # 2*MaxDistance window can reach across a doc (and therefore
-            # shard-segment) boundary, which the per-shard device join
-            # cannot see (pack_qt2_batch's doc_shards caveat) — exact
-            # equivalence beats the compiled step there
-            if index.wv is None or self.doc_shards > 1:
-                return ("cpu", None, None)
-            if len(select_wv_keys(ids)) > self.k_wv:
-                return ("cpu", None, None)
-            ordered, longest = ordered_wv_keys(index, ids)
-            bucket = self._ladder(longest)
-            return ("qt2", bucket, ordered) if bucket else ("cpu", None, None)
-        if qtype == QueryType.QT5:
-            if index.nsw is None:
-                return ("cpu", None, None)
-            plan = qt5_plan(index, ids)
-            if plan is None:
-                return ("cpu", None, None)
-            anchor, others, stops, counts = plan
-            if (
-                len(others) > self.k_ns
-                or len(stops) > self.k_st
-                or any(r > self.r_max for _, r in others)
-                or any(r > 254 for _, r in stops)
-            ):
-                return ("cpu", None, None)
-            longest = max(counts[anchor],
-                          max((counts[l] for l, _ in others), default=0))
-            bucket = self._ladder(longest)
-            return ("qt5", bucket, plan) if bucket else ("cpu", None, None)
-        # QT3/QT4: ordinary-index window scans through the shared
-        # qt34_join — computationally identical, so one route serves both
-        if index.ordinary is None:
-            return ("cpu", None, None)
-        plan = qt34_plan(index, ids)
-        _, others, counts = plan
-        if len(others) > self.k_ord or any(r > self.r_max for _, r in others):
-            return ("cpu", None, None)
-        bucket = self._ladder(max(counts.values()))
-        return ("qt34", bucket, plan) if bucket else ("cpu", None, None)
+    @property
+    def pack_cache(self):
+        return self.service.pack_cache
 
-    def submit(self, lemma_ids) -> None:
-        """Queue one search request (a list of lemma ids, i.e. one
-        sub-query of ``core.query.build_subqueries``) for the next
-        :meth:`drain`.
+    @property
+    def compressed_cache(self):
+        return self.service.compressed_cache
 
-        Thread-safe and non-blocking: requests only accumulate here —
-        no packing, classification or device work happens until the
-        batcher cuts a batch. An empty list is answered with an empty
-        result set; unknown lemmas (``UNKNOWN_FL``) route to the scalar
-        engine, which resolves them to no matches."""
-        req = SearchRequest(list(lemma_ids))
-        with self._queue_lock:
-            self._queue.append(req)
+    @property
+    def mesh(self):
+        return self.service.mesh
 
-    def drain(self) -> list[SearchResponse]:
-        """Serve everything queued, returning one :class:`SearchResponse`
-        per request **in submission order**.
+    @property
+    def buckets(self) -> tuple:
+        return self.service.config.buckets
 
-        The snapshot is pinned once for the whole drain, so every batch
-        sees one consistent view even while the indexer refreshes
-        concurrently. Each request is classified QT1-QT5 and routed per
-        the dispatch matrix (DESIGN.md §13): QT1 to the (f,s,t) step,
-        QT2 to the (w,v) interval-join step, QT3/QT4 to the
-        ordinary-window step, QT5 to the NSW step — grouped per
-        (path, L-bucket), padded to the power-of-two batch ladder and
-        served largest group first in ``max_batch``-sized chunks;
-        inexpressible shapes take the scalar CPU engine. Routing is
-        memoized per lemma-id tuple per snapshot; ``stats["paths"]``
-        counts the split. Each response carries its serve path, bucket,
-        batch size and wall-clock batch latency."""
-        if not self._queue:
-            return []
-        index = self.index
-        # swap the queue out under the submit lock BEFORE grouping: a
-        # submit() racing this drain either lands before the swap (and is
-        # served now) or after it (and stays queued) — never silently
-        # dropped into the already-grouped list
-        with self._queue_lock:
-            pending, self._queue = self._queue, []
-        slots: list = [None] * len(pending)
-        groups: dict[tuple, list[int]] = {}
-        for i, r in enumerate(pending):
-            path, bucket, _ = self._route(index, r.lemma_ids)
-            groups.setdefault((path, bucket), []).append(i)
-        for (path, bucket), idxs in sorted(groups.items(), key=lambda kv: -len(kv[1])):
-            if path == "empty":
-                for i in idxs:
-                    slots[i] = SearchResponse(results=dict(_EMPTY_RESULT),
-                                              latency_s=0.0, bucket=0,
-                                              batch_size=1, path=path)
-                self.stats["requests"] += len(idxs)
-                self.stats["paths"]["empty"] = (
-                    self.stats["paths"].get("empty", 0) + len(idxs)
-                )
-            elif path == "cpu":
-                self._serve_cpu(index, pending, idxs, slots)
-            else:
-                for lo in range(0, len(idxs), self.max_batch):
-                    chunk = idxs[lo : lo + self.max_batch]
-                    self._serve_batch(index, path, bucket, pending, chunk, slots)
-        return slots
+    @property
+    def max_batch(self) -> int:
+        return self.service.config.max_batch
 
-    # -- the scalar correctness backstop ----------------------------------
-    def _serve_cpu(self, index, pending, idxs, slots) -> None:
-        from repro.core.search import ProximitySearchEngine
+    @property
+    def top_k(self) -> int:
+        return self.service.config.top_k
 
-        if self._cpu_engine is None or self._cpu_engine.index is not index:
-            self._cpu_engine = ProximitySearchEngine(
-                index, top_k=self.top_k, equalize_mode="bulk"
-            )
-        for i in idxs:
-            t0 = time.perf_counter()
-            res, _ = self._cpu_engine.search_ids(pending[i].lemma_ids)
-            slots[i] = SearchResponse(
-                results={"doc": res.doc, "start": res.start, "end": res.end,
-                         "score": res.score},
-                latency_s=time.perf_counter() - t0, bucket=0, batch_size=1,
-                path="cpu",
-            )
-        self.stats["requests"] += len(idxs)
-        self.stats["paths"]["cpu"] += len(idxs)
+    @property
+    def doc_shards(self) -> int:
+        return self.service.config.doc_shards
 
-    # -- compiled paths ----------------------------------------------------
-    def _path_fns(self, path):
-        """(assemble_fn, pack_fn, compress_fn, kind prefix, K kwargs) for
-        one compiled path — the only place the three paths differ."""
-        if path == "qt1":
-            return (assemble_qt1_compressed, pack_qt1_batch,
-                    compress_qt1_batch, "", {"K": self.k_fst})
-        if path == "qt2":
-            return (assemble_qt2_compressed, pack_qt2_batch,
-                    compress_qt2_batch, "qt2_", {"K": self.k_wv})
-        if path == "qt34":
-            return (assemble_qt34_compressed, pack_qt34_batch,
-                    compress_qt34_batch, "qt34_", {"Kn": self.k_ord})
-        return (assemble_qt5_compressed, pack_qt5_batch,
-                compress_qt5_batch, "qt5_", {"Kn": self.k_ns, "Ks": self.k_st})
+    @property
+    def compressed(self) -> bool:
+        return self.service.config.compressed
 
-    def _run_compiled(self, index, path, bucket, queries, plans):
-        """Pack + execute one padded batch on the right compiled step;
-        returns (batch_or_stub, device outs). ``plans`` carries the
-        route-memoized key selections, aligned with ``queries``."""
-        assemble_fn, pack_fn, compress_fn, prefix, kw = self._path_fns(path)
-        ccache = self.compressed_cache
-        if self.compressed and ccache is not None:
-            kind, args, stub = assemble_fn(
-                index, queries, L=bucket, doc_shards=self.doc_shards,
-                ccache=ccache, cache=self.pack_cache, plans=plans, **kw,
-            )
-            self._count_compressed(kind)
-            return stub, self._step(kind)(*args)
-        batch = pack_fn(
-            index, queries, L=bucket, doc_shards=self.doc_shards,
-            cache=self.pack_cache, plans=plans, **kw,
-        )
-        if not self.compressed:
-            raw_kind = "base" if path == "qt1" else f"{path}_raw"
-            return batch, self._step(raw_kind)(*batch.device_args())
-        kind, args = self._compress_batch(bucket, batch, compress_fn, prefix=prefix)
-        return batch, self._step(kind)(*args)
-
-    def _compress_batch(self, bucket, batch, compress_fn, prefix=""):
-        """Cache-less compressed path: whole-batch re-encode with the
-        per-(path, bucket) sticky delta verdict (PR 2 behavior, kept for
-        benchmarking and as the use_compressed_cache=False fallback)."""
-        ck = (prefix, bucket)
-        ok = self._delta_ok.get(ck)
-        if ok is None:
-            ok = bucket % (64 * self.doc_shards) == 0
-            self._delta_ok[ck] = ok
-        kind = "offsets"
-        if ok:
-            try:
-                args = compress_fn(batch, delta_g=True)
-                kind = "delta"
-            except ValueError:  # in-block key span overflows uint16
-                self._delta_ok[ck] = False
-        if kind == "offsets":
-            args = compress_fn(batch, delta_g=False)
-        self._count_compressed(kind)
-        return prefix + kind, args
-
-    def _count_compressed(self, kind: str) -> None:
-        self.stats["compressed_batches"] += 1
-        if kind.endswith("offsets"):
-            self.stats["offset_fallbacks"] += 1
-
-    def _serve_batch(self, index, path, bucket, pending, idxs, slots) -> None:
-        t0 = time.perf_counter()
-        B_pad = batch_size_bucket(len(idxs), self.max_batch)
-        pad = B_pad - len(idxs)
-        queries = [pending[i].lemma_ids for i in idxs] + [[]] * pad
-        plans = [self._route(index, pending[i].lemma_ids)[2] for i in idxs]
-        batch, outs = self._run_compiled(index, path, bucket, queries,
-                                         plans + [None] * pad)
-        decoded = decode_results(batch, *outs)
-        dt = time.perf_counter() - t0
-        self.stats["batches"] += 1
-        self.stats["requests"] += len(idxs)
-        self.stats["paths"][path] += len(idxs)
-        if bucket in self.stats["bucket_hist"]:
-            self.stats["bucket_hist"][bucket] += 1
-        if self.pack_cache is not None:
-            self.stats["pack_cache"] = self.pack_cache.stats
-        if self.compressed_cache is not None:
-            self.stats["compressed_cache"] = self.compressed_cache.stats
-        for bi, i in enumerate(idxs):
-            slots[i] = SearchResponse(results=decoded[bi], latency_s=dt,
-                                      bucket=bucket, batch_size=len(idxs),
-                                      path=path)
-
-
-class LMContinuousBatcher:
-    """Slot-based continuous batching for LM decode (vLLM-style admission,
-    greedy sampling): a fixed pool of B cache slots; finished sequences
-    free their slot and queued prompts are admitted at the next step."""
-
-    def __init__(self, cfg, params, batch_slots: int, max_len: int, eos_id: int = 0):
-        import jax.numpy as jnp
-
-        from repro.models import transformer
-
-        self.cfg = cfg
-        self.params = params
-        self.B = batch_slots
-        self.max_len = max_len
-        self.eos_id = eos_id
-        self.caches = transformer.init_cache(cfg, batch_slots, max_len)
-        self.tokens = np.zeros((batch_slots, 1), np.int32)
-        self.lengths = np.zeros(batch_slots, np.int32)
-        self.active = np.zeros(batch_slots, bool)
-        self.seq_outputs: dict[int, list] = {}
-        self.next_id = 0
-        self.slot_owner = [-1] * batch_slots
-        self.queue: list[list[int]] = []
-        import jax
-
-        self._decode = jax.jit(
-            lambda p, t, c, pos: transformer.decode_step(cfg, p, t, c, pos)
-        )
-
-    def submit(self, prompt_ids: list) -> int:
-        rid = self.next_id
-        self.next_id += 1
-        self.queue.append((rid, list(prompt_ids)))
-        return rid
-
-    def _admit(self):
-        import jax.numpy as jnp
-
-        for slot in range(self.B):
-            if not self.active[slot] and self.queue:
-                rid, prompt = self.queue.pop(0)
-                # prefill the slot by stepping through the prompt (simple
-                # admission; production would use a chunked prefill kernel)
-                self.active[slot] = True
-                self.slot_owner[slot] = rid
-                self.seq_outputs[rid] = []
-                self.lengths[slot] = 0
-                for tok in prompt:
-                    self.tokens[slot, 0] = tok
-                    # positions handled in step(); prompt tokens fed one by one
-
-    def step(self) -> dict:
-        """One decode step for all active slots. Returns finished seqs."""
-        import jax.numpy as jnp
-
-        self._admit()
-        if not self.active.any():
-            return {}
-        pos = int(self.lengths.max())
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(self.tokens), self.caches, jnp.int32(pos)
-        )
-        nxt = np.asarray(logits.argmax(axis=-1)).astype(np.int32)
-        finished = {}
-        for slot in range(self.B):
-            if not self.active[slot]:
-                continue
-            tok = int(nxt[slot])
-            rid = self.slot_owner[slot]
-            self.seq_outputs[rid].append(tok)
-            self.tokens[slot, 0] = tok
-            self.lengths[slot] += 1
-            if tok == self.eos_id or self.lengths[slot] >= self.max_len - 1:
-                finished[rid] = self.seq_outputs.pop(rid)
-                self.active[slot] = False
-                self.slot_owner[slot] = -1
-        return finished
+    @property
+    def _queue(self) -> list:
+        # a pre-§14 test asserts the queue is empty after drain()
+        return self.service._queue

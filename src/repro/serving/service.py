@@ -1,0 +1,409 @@
+"""SearchService: the deadline-aware serving facade (DESIGN.md §14).
+
+The serving tier is three explicit layers — this module is the top one:
+
+* :mod:`repro.serving.planner` — pure per-query routing
+  (``plan(request, snapshot, config) -> QueryPlan``);
+* :mod:`repro.serving.executors` — ``CompiledExecutor`` (serve-step
+  factories + the shared per-(kind, B, L) executable table) and
+  ``ScalarExecutor`` behind one protocol;
+* :class:`SearchService` — submit/drain/refresh/explain over one
+  :class:`ServeConfig`, replacing the fifteen positional knobs of the
+  old monolithic engine.
+
+``submit(lemma_ids, deadline_s=...)`` returns a :class:`SearchTicket`
+resolved by the next :meth:`SearchService.drain`; every
+:class:`SearchResponse` carries the :class:`QueryPlan` that routed it,
+whether its deadline was met, and how long it waited in the queue —
+the paper's response-time guarantee as an observable, per-request
+contract instead of an implicit property of a compiled step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.serving import planner as _planner
+from repro.serving.executors import (
+    CompiledExecutor,
+    ExecResult,
+    ScalarExecutor,
+    empty_results,
+)
+from repro.serving.pack_cache import PackedPostingCache
+from repro.serving.planner import QueryPlan
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Every serving knob in one (frozen, reusable) place.
+
+    * ``buckets`` — the L-bucket ladder posting rows are padded to; one
+      compiled executable exists per (step kind, B-bucket, L-bucket);
+    * ``max_batch`` / ``top_k`` / ``doc_shards`` — batch cap, results
+      per query, model-axis doc shards;
+    * ``compressed`` — serve the block-delta16 device payload
+      (DESIGN.md §11-§12) with per-batch offsets fallback;
+    * ``use_pack_cache`` / ``use_compressed_cache`` / ``cache_entries``
+      / ``cache_bytes`` — the packed-posting row caches;
+    * ``k_fst``/``k_wv``/``k_ns``/``k_st``/``k_ord``/``r_max`` — static
+      key/constraint capacities of the compiled steps (the dispatch
+      matrix's fallback thresholds, DESIGN.md §13);
+    * ``share_buckets`` — dispatch-aware batching: qt34 groups whose
+      plans fit the QT5 step's non-stop slots ride the qt5 executable
+      of the same (B, L), and are batched together with qt5 traffic
+      (DESIGN.md §14);
+    * ``default_deadline_s`` — deadline attached to submits that don't
+      pass one (None = no deadline)."""
+
+    buckets: tuple = (1024, 4096, 16384, 65536)
+    max_batch: int = 64
+    top_k: int = 16
+    doc_shards: int = 1
+    compressed: bool = False
+    use_pack_cache: bool = True
+    use_compressed_cache: bool = True
+    cache_entries: int = 4096
+    cache_bytes: int = 256 << 20
+    k_fst: int = 2
+    k_wv: int = 3
+    k_ns: int = 3
+    k_st: int = 3
+    k_ord: int = 4
+    r_max: int = 4
+    share_buckets: bool = True
+    default_deadline_s: float | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+
+
+@dataclass
+class SearchRequest:
+    """Import-compatibility symbol only: no code path constructs it —
+    the serving queue holds :class:`SearchTicket` records now. Deleted
+    together with the :class:`SearchServingEngine` shim."""
+
+    lemma_ids: list
+    arrival: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class SearchTicket:
+    """Future-like handle returned by :meth:`SearchService.submit`,
+    resolved in place by the next :meth:`SearchService.drain` (there is
+    no background thread — resolution is the drain that serves it)."""
+
+    lemma_ids: list
+    deadline_s: float | None = None
+    arrival: float = field(default_factory=time.perf_counter)
+    response: "SearchResponse | None" = None
+
+    @property
+    def done(self) -> bool:
+        return self.response is not None
+
+    def result(self) -> "SearchResponse":
+        if self.response is None:
+            raise RuntimeError("ticket not resolved yet — call drain()")
+        return self.response
+
+
+@dataclass
+class SearchResponse:
+    """One served request: the results plus the serving contract —
+    ``plan`` is the :class:`QueryPlan` that routed it (its ``payload``
+    reflects the format actually executed), ``deadline_met`` whether
+    resolution beat the ticket's budget (None when no deadline was
+    set), ``queue_wait_s`` the time between submit and its batch
+    starting execution."""
+
+    results: dict
+    latency_s: float
+    bucket: int
+    batch_size: int
+    path: str = "qt1"
+    plan: QueryPlan | None = None
+    deadline_met: bool | None = None
+    queue_wait_s: float = 0.0
+
+
+def _route_to_path(route: str) -> str:
+    """Plan routes -> the executed-path names of ``stats["paths"]``
+    (the pre-planner vocabulary: the scalar route reports as "cpu")."""
+    return "cpu" if route == _planner.ROUTE_SCALAR else route
+
+
+class SearchService:
+    """Deadline-aware, bucketed, batched proximity-search serving over
+    a static ``ProximityIndex`` or a snapshot-able incremental index
+    (``repro.index.SegmentedIndex``).
+
+    Serving always runs against an *immutable* searcher snapshot: a
+    drain pins the snapshot once, so in-flight batches see a consistent
+    view even while the indexer seals memtables and runs background
+    merges; :meth:`refresh` picks up the indexer's latest published
+    snapshot. Each request is routed by the pure planner per the
+    DESIGN.md §13 dispatch matrix, grouped per (step family, L-bucket)
+    — with ``share_buckets``, qt34 and qt5 traffic batch together on
+    the qt5 executables — padded to the power-of-two batch ladder, and
+    served earliest-deadline-group first; shapes the static steps
+    cannot express take the scalar engine, so results are always
+    exact. :meth:`explain` returns the plan without executing.
+
+    Hot-path machinery under the facade is unchanged from DESIGN.md
+    §11-§13: the packed-posting row caches (snapshot-identity
+    invalidation, add-only retention), the per-key compressed-row
+    cache, and the compiled per-(kind, B, L) executable table now owned
+    by :class:`CompiledExecutor`."""
+
+    def __init__(self, index, mesh, config: ServeConfig | None = None):
+        self.config = config if config is not None else ServeConfig()
+        self._source = index if hasattr(index, "snapshot") else None
+        self.index = index.snapshot() if self._source is not None else index
+        if self.config.compressed and getattr(self.index, "max_distance", 0) > 254:
+            # all compressed formats carry fragment bounds / NSW offsets
+            # as uint8 distances; beyond 254 they would silently clip
+            raise ValueError(
+                "compressed serving requires max_distance <= 254 "
+                f"(got {self.index.max_distance})"
+            )
+        self.mesh = mesh
+        cfg = self.config
+        self.pack_cache = (
+            PackedPostingCache(max_entries=cfg.cache_entries,
+                               max_bytes=cfg.cache_bytes)
+            if cfg.use_pack_cache
+            else None
+        )
+        # per-key compressed rows derive from (and sit beside) the raw
+        # row cache; without it every warm compressed drain re-runs the
+        # O(B·K·L) host delta encoding
+        self.compressed_cache = (
+            PackedPostingCache(max_entries=cfg.cache_entries,
+                               max_bytes=cfg.cache_bytes,
+                               source=self.pack_cache)
+            if cfg.compressed and cfg.use_compressed_cache
+            else None
+        )
+        self.compiled = CompiledExecutor(
+            mesh, cfg, pack_cache=self.pack_cache,
+            compressed_cache=self.compressed_cache,
+        )
+        self.scalar = ScalarExecutor(cfg)
+        self._queue: list[SearchTicket] = []
+        self._queue_lock = threading.Lock()
+        # per-snapshot lemma ids -> QueryPlan; validity is tied to the
+        # *pinned view's identity* (not to refresh() clearing it: a
+        # drain racing a refresh could otherwise re-insert a stale
+        # entry after the clear). Bounded: a high-cardinality query
+        # stream over a static index never refreshes, so the memo is
+        # cleared wholesale at the cap (rebuilding an entry is one
+        # n_postings scan per key)
+        self._plan_memo: dict[tuple, QueryPlan] = {}
+        self._plan_memo_view = None
+        self._plan_memo_cap = 65536
+        self.stats = {
+            "batches": 0, "requests": 0, "refreshes": 0,
+            "compressed_batches": 0, "offset_fallbacks": 0,
+            "bucket_hist": {b: 0 for b in cfg.buckets},
+            "paths": {"qt1": 0, "qt2": 0, "qt34": 0, "qt5": 0,
+                      "cpu": 0, "empty": 0},
+            "plans": {
+                "routes": {r: 0 for r in (*_planner.COMPILED_ROUTES,
+                                          _planner.ROUTE_SCALAR,
+                                          _planner.ROUTE_EMPTY)},
+                "fallbacks": {},
+                "executables": 0,
+                "shared_batches": 0,
+            },
+            "deadlines": {"met": 0, "missed": 0, "unset": 0},
+            "pack_cache": {}, "compressed_cache": {},
+        }
+
+    # -- planning ----------------------------------------------------------
+    def _plan(self, index, lemma_ids) -> QueryPlan:
+        if index is not self._plan_memo_view:
+            # the scalar executor tracks snapshot identity itself
+            self._plan_memo = {}
+            self._plan_memo_view = index
+        memo_key = tuple(lemma_ids)
+        p = self._plan_memo.get(memo_key)
+        if p is not None:
+            return p
+        p = _planner.plan(list(lemma_ids), index, self.config)
+        if len(self._plan_memo) >= self._plan_memo_cap:
+            self._plan_memo.clear()
+        self._plan_memo[memo_key] = p
+        return p
+
+    def explain(self, lemma_ids) -> QueryPlan:
+        """The :class:`QueryPlan` this request would execute under —
+        route, executable family, L-bucket, payload, estimated step
+        cost, fallback reason — without executing anything. Planned
+        against the currently pinned snapshot with the same memo the
+        next drain will use, so ``explain(q)`` and the executed
+        ``response.plan`` agree (tests/test_planner.py pins this per
+        dispatch-matrix row)."""
+        return self._plan(self.index, lemma_ids)
+
+    # -- lifecycle ---------------------------------------------------------
+    def refresh(self) -> None:
+        """Pick up the indexer's latest published snapshot.
+
+        A no-op when serving a static ``ProximityIndex``; for a
+        ``repro.index.SegmentedIndex`` source this swaps in the newest
+        immutable ``SegmentedView``, making documents added or deleted
+        since the previous refresh visible to subsequent drains.
+        Already in-flight drains keep the snapshot they pinned. The
+        compiled executable table is reused across refreshes (only the
+        host-side packing sees the new postings); plans are re-derived
+        lazily, and the row caches invalidate themselves on the first
+        lookup against the new snapshot — entries are keyed by snapshot
+        identity, and add-only refreshes retain untouched keys
+        (DESIGN.md §12)."""
+        if self._source is not None:
+            self.index = self._source.snapshot()
+            self.stats["refreshes"] += 1
+
+    # -- serving -----------------------------------------------------------
+    def submit(self, lemma_ids, deadline_s: float | None = None) -> SearchTicket:
+        """Queue one request (a lemma-id list, i.e. one sub-query of
+        ``core.query.build_subqueries``) for the next :meth:`drain`;
+        returns its :class:`SearchTicket`. ``deadline_s`` is a budget
+        from *now* (submission): the resolving drain reports
+        ``deadline_met`` per response and prioritizes
+        tighter-deadline groups. Thread-safe and non-blocking — no
+        planning, packing or device work happens until the batcher
+        cuts a batch."""
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
+        ticket = SearchTicket(list(lemma_ids), deadline_s=deadline_s)
+        with self._queue_lock:
+            self._queue.append(ticket)
+        return ticket
+
+    def drain(self) -> list[SearchResponse]:
+        """Serve everything queued, resolving every pending ticket and
+        returning one :class:`SearchResponse` per request **in
+        submission order**.
+
+        The snapshot is pinned once for the whole drain. Requests are
+        planned (memoized per lemma-id tuple per snapshot), grouped per
+        (step family, L-bucket) — so with ``share_buckets`` qt34 and
+        qt5 requests batch together — padded to the power-of-two batch
+        ladder, and groups are served earliest-deadline first
+        (deadline-less groups follow, largest first). Each response
+        carries its plan, executed path, bucket, batch size, wall-clock
+        batch latency, queue wait and deadline verdict."""
+        if not self._queue:
+            return []
+        index = self.index
+        # swap the queue out under the submit lock BEFORE grouping: a
+        # submit() racing this drain either lands before the swap (and
+        # is served now) or after it (and stays queued) — never
+        # silently dropped into the already-grouped list
+        with self._queue_lock:
+            pending, self._queue = self._queue, []
+        slots: list = [None] * len(pending)
+        plans = [self._plan(index, t.lemma_ids) for t in pending]
+        groups: dict[tuple, list[int]] = {}
+        for i, p in enumerate(plans):
+            if p.route == _planner.ROUTE_EMPTY:
+                key = ("empty", None)
+            elif p.route == _planner.ROUTE_SCALAR:
+                key = ("scalar", None)
+            else:
+                key = (p.step_family, p.bucket)
+            groups.setdefault(key, []).append(i)
+
+        def urgency(item):
+            _, idxs = item
+            deadline = min(
+                (pending[i].arrival + pending[i].deadline_s
+                 for i in idxs if pending[i].deadline_s is not None),
+                default=float("inf"),
+            )
+            return (deadline, -len(idxs))
+
+        for (family, bucket), idxs in sorted(groups.items(), key=urgency):
+            if family == "empty":
+                now = time.perf_counter()
+                for i in idxs:
+                    self._resolve(pending[i], plans[i], slots, i, ExecResult(
+                        results=empty_results(), latency_s=0.0, bucket=0,
+                        batch_size=1, started_at=now, finished_at=now,
+                    ))
+                continue
+            queries = [pending[i].lemma_ids for i in idxs]
+            if family == "scalar":
+                execs = self.scalar.execute(index, queries,
+                                            [None] * len(idxs),
+                                            step_family=None, bucket=None)
+            else:
+                sels = [self._selection_for(plans[i], family) for i in idxs]
+                shared = [plans[i].route != family for i in idxs]
+                execs = self.compiled.execute(index, queries, sels,
+                                              step_family=family,
+                                              bucket=bucket, shared=shared)
+                if bucket in self.stats["bucket_hist"]:
+                    mb = self.config.max_batch
+                    self.stats["bucket_hist"][bucket] += -(-len(idxs) // mb)
+            for i, ex in zip(idxs, execs):
+                self._resolve(pending[i], plans[i], slots, i, ex)
+        self._finish_stats(plans)
+        return slots
+
+    @staticmethod
+    def _selection_for(p: QueryPlan, family: str):
+        """Packer-ready key selection: a qt34 plan riding the qt5 step
+        becomes a zero-stop qt5 plan (anchor, others, (), counts)."""
+        if p.route == _planner.ROUTE_QT34 and family == _planner.ROUTE_QT5:
+            anchor, others, counts = p.selection
+            return anchor, others, (), counts
+        return p.selection
+
+    def _resolve(self, ticket, p: QueryPlan, slots, i, ex: ExecResult) -> None:
+        # deadline and queue wait are judged against *this request's
+        # batch* (its ExecResult timestamps), not the whole group — in a
+        # multi-chunk group, earlier chunks resolve earlier
+        met = None
+        if ticket.deadline_s is not None:
+            met = (ex.finished_at - ticket.arrival) <= ticket.deadline_s
+            self.stats["deadlines"]["met" if met else "missed"] += 1
+        else:
+            self.stats["deadlines"]["unset"] += 1
+        executed = p if ex.payload in (None, p.payload) \
+            else dataclasses.replace(p, payload=ex.payload)
+        resp = SearchResponse(
+            results=ex.results, latency_s=ex.latency_s, bucket=ex.bucket,
+            batch_size=ex.batch_size, path=_route_to_path(p.route),
+            plan=executed, deadline_met=met,
+            queue_wait_s=max(ex.started_at - ticket.arrival, 0.0),
+        )
+        ticket.response = resp
+        slots[i] = resp
+
+    def _finish_stats(self, plans: list[QueryPlan]) -> None:
+        st = self.stats
+        st["requests"] += len(plans)
+        routes = st["plans"]["routes"]
+        for p in plans:
+            routes[p.route] = routes.get(p.route, 0) + 1
+            st["paths"][_route_to_path(p.route)] += 1
+            if p.fallback_reason is not None:
+                fb = st["plans"]["fallbacks"]
+                fb[p.fallback_reason] = fb.get(p.fallback_reason, 0) + 1
+        ex = self.compiled
+        st["batches"] = ex.stats["batches"]
+        st["compressed_batches"] = ex.stats["compressed_batches"]
+        st["offset_fallbacks"] = ex.stats["offset_fallbacks"]
+        st["plans"]["executables"] = ex.n_executables
+        st["plans"]["shared_batches"] = ex.stats["shared_batches"]
+        if self.pack_cache is not None:
+            st["pack_cache"] = self.pack_cache.stats
+        if self.compressed_cache is not None:
+            st["compressed_cache"] = self.compressed_cache.stats

@@ -109,3 +109,18 @@ def test_tracked_bench_report_covers_dispatch_routes():
     typed = payload["reports"]["serve"]["drain_typed"]
     for key in ("qt3", "qt4", "qt3_compressed", "qt4_compressed"):
         assert {"cold", "warm"} <= typed[key].keys(), key
+
+
+def test_tracked_bench_report_covers_planner_layer():
+    """The §14 planner-layer metrics must stay in BENCH_serve.json: the
+    deadline_met_rate row (the response-time guarantee as one number)
+    and the per-route plan stats incl. dispatch-aware batching."""
+    payload = json.loads((REPO / "BENCH_serve.json").read_text())
+    names = {r["name"] for r in payload["rows"]}
+    assert any("deadline_met_rate" in n for n in names), sorted(names)
+    rep = payload["reports"]["serve"]
+    assert {"budget_ms", "met_rate", "n"} <= rep["deadline"].keys()
+    routes = rep["plans"]["routes"]
+    for route in ("qt1", "qt2", "qt34", "qt5", "scalar"):
+        assert route in routes, (route, routes)
+    assert "executables" in rep["plans"] and "shared_batches" in rep["plans"]
