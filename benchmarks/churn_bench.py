@@ -158,7 +158,7 @@ def run(
         rep["serve_p95_ms"] = _pct(serve_cold + serve_warm, 95) * 1e3
         rep["serve_compressed"] = int(serve_compressed)
         if serve_engine.pack_cache is not None:
-            cs = serve_engine.pack_cache.stats
+            cs = serve_engine.stats_snapshot()["pack_cache"]
             rep["serve_cache_hit_rate"] = cs["hit_rate"]
             rep["serve_cache_hits"] = cs["hits"]
             rep["serve_cache_misses"] = cs["misses"]

@@ -5,8 +5,11 @@ packing, engine drains uncompressed vs warm-cache vs compressed
 (re-encode-per-drain vs per-key compressed-row cache), per-type
 cold/warm drains for every dispatch route, five-type mixed drains
 through the query-type dispatch, the per-route plan statistics of the
-planner layer (DESIGN.md §14), and the deadline_met_rate of a
-50 ms-budget drain through ``SearchService.submit(deadline_s=...)``.
+planner layer (DESIGN.md §14), the per-phase latency breakdown of the
+mixed stream (``serve/phase.*`` rows from the §15 metrics registry,
+with the phase-sum-vs-e2e tiling check), and the deadline_met_rate of a
+50 ms-budget drain through ``SearchService.submit(deadline_s=...)``
+with per-miss phase blame (``serve/deadline_miss_phase``).
 
 ``run()`` returns ``(rows, report)``: CSV rows for the harness and a
 nested dict that ``benchmarks/run.py --json`` writes to BENCH_serve.json
@@ -136,16 +139,17 @@ def run(smoke: bool = False):
     lat = _measure_drains(variants, qs, rounds)
     for name, eng in variants:
         us = lat[name]
+        st = eng.stats_snapshot()
         d = rep["drain"][name] = {"us": us, "per_query_us": us / eng_B}
         derived = f"per_query_us={us / eng_B:.1f}"
         if eng.pack_cache is not None:
-            d["cache_hit_rate"] = eng.pack_cache.stats["hit_rate"]
+            d["cache_hit_rate"] = st["pack_cache"]["hit_rate"]
             derived += f";cache_hit_rate={d['cache_hit_rate']:.3f}"
         if eng.config.compressed:
-            d["offset_fallbacks"] = eng.stats["offset_fallbacks"]
+            d["offset_fallbacks"] = st["offset_fallbacks"]
             derived += f";offset_fallbacks={d['offset_fallbacks']}"
         if eng.compressed_cache is not None:
-            d["compressed_cache_hit_rate"] = eng.compressed_cache.stats["hit_rate"]
+            d["compressed_cache_hit_rate"] = st["compressed_cache"]["hit_rate"]
             derived += f";ccache_hit_rate={d['compressed_cache_hit_rate']:.3f}"
         rows.append((f"serve/drain_{name}_B{eng_B}_L{eng_L}", us, derived))
     rep["drain"]["warm_vs_uncached_speedup"] = (
@@ -185,7 +189,7 @@ def run(smoke: bool = False):
         for name, _ in dvariants
     }
     rep["drain"]["delta_regime"]["offset_fallbacks"] = (
-        dvariants[1][1].stats["offset_fallbacks"]
+        dvariants[1][1].stats_snapshot()["offset_fallbacks"]
     )
     rep["drain"]["compressed_cache_speedup"] = (
         dlat["compressed_reencode"] / dlat["compressed_cached"]
@@ -244,12 +248,44 @@ def run(smoke: bool = False):
         us = mlat[name]
         d = rep["drain_mixed"][name] = {"us": us, "per_query_us": us / len(mixed)}
         derived = f"per_query_us={us / len(mixed):.1f}"
-        d["paths"] = dict(eng.stats["paths"])
+        d["paths"] = eng.stats_snapshot()["paths"]
         rows.append((f"serve/drain_{name}_B{len(mixed)}_L{eng_L}", us, derived))
     rep["drain_mixed"]["compressed_cache_speedup"] = (
         rep["drain_mixed"]["mixed_compressed_reencode"]["us"]
         / rep["drain_mixed"]["mixed_compressed_cached"]["us"]
     )
+
+    # -- phase-latency breakdown over the mixed stream (DESIGN.md §15) -----
+    # Every SearchResponse carries a per-phase latency dict whose entries
+    # tile [arrival, finished_at]; the registry accumulates the same
+    # numbers as serve.phase.* histograms across every drain above. One
+    # more captured warm drain checks the tiling invariant end to end:
+    # per-request phase sums must agree with the e2e drain latency (the
+    # acceptance bound is 10%; only the per-request plan timing overlaps
+    # the queue window, and it is microseconds).
+    meng = mvariants[1][1]  # mixed_cached: warm rows, all five types
+    for q in mixed:
+        meng.submit(q)
+    presponses = meng.drain()
+    psums = np.array([sum(r.phases.values()) for r in presponses])
+    e2e = np.array([r.e2e_s for r in presponses])
+    phase_err = float(np.max(np.abs(psums - e2e) / np.maximum(e2e, 1e-12)))
+    phase_hists = meng.metrics_snapshot("serve.phase.")
+    rep["phases"] = {
+        "per_request_sum_vs_e2e_max_rel_err": phase_err,
+        **{
+            name.rsplit(".", 1)[-1]: {
+                "p50_us": h["p50"], "p95_us": h["p95"], "count": h["count"],
+            }
+            for name, h in phase_hists.items()
+        },
+    }
+    for name, h in sorted(phase_hists.items()):
+        rows.append((
+            f"serve/phase.{name.rsplit('.', 1)[-1]}", h["p50"],
+            f"p95_us={h['p95']:.1f};count={h['count']};"
+            f"sum_vs_e2e_max_rel_err={phase_err:.4f}",
+        ))
 
     # -- planner layer: per-route plan stats + deadline_met_rate -----------
     # (DESIGN.md §14) The mixed cached engine exercised every dispatch
@@ -257,13 +293,15 @@ def run(smoke: bool = False):
     # executable count and how many qt34 batches rode qt5 executables
     # (dispatch-aware batching). The deadline drain re-submits the mixed
     # stream with a 50 ms budget on the warm engine — the met rate is
-    # the response-time guarantee as a single observable number.
-    meng = mvariants[1][1]  # mixed_cached: warm rows, all routes
+    # the response-time guarantee as a single observable number, and each
+    # miss names the phase that blew the budget (§15 blame attribution).
+    mstats = meng.stats_snapshot()
     rep["plans"] = {
-        "routes": dict(meng.stats["plans"]["routes"]),
-        "fallbacks": dict(meng.stats["plans"]["fallbacks"]),
-        "executables": meng.stats["plans"]["executables"],
-        "shared_batches": meng.stats["plans"]["shared_batches"],
+        "routes": mstats["plans"]["routes"],
+        "fallbacks": mstats["plans"]["fallbacks"],
+        "executables": mstats["plans"]["executables"],
+        "shared_batches": mstats["plans"]["shared_batches"],
+        "est_vs_measured": mstats["plans"]["est_vs_measured"],
     }
     budget_s = 0.05
     tickets = [meng.submit(q, deadline_s=budget_s) for q in mixed]
@@ -271,17 +309,24 @@ def run(smoke: bool = False):
     met = sum(1 for t in tickets if t.response.deadline_met)
     met_rate = met / max(len(tickets), 1)
     waits = [t.response.queue_wait_s for t in tickets]
+    miss_blame = meng.stats_snapshot()["deadlines"]["miss_blame"]
     rep["deadline"] = {
         "budget_ms": budget_s * 1e3,
         "met_rate": met_rate,
         "n": len(tickets),
         "queue_wait_p50_us": float(np.percentile(waits, 50)) * 1e6,
+        "miss_blame": miss_blame,
     }
     rows.append((
         "serve/deadline_met_rate_50ms", met_rate,
         f"met={met}/{len(tickets)};routes={len(rep['plans']['routes'])};"
         f"executables={rep['plans']['executables']};"
         f"shared_batches={rep['plans']['shared_batches']}",
+    ))
+    rows.append((
+        "serve/deadline_miss_phase", float(len(tickets) - met),
+        ";".join(f"blame_{k}={v}" for k, v in sorted(miss_blame.items()))
+        or "blame_none=0",
     ))
     return rows, rep
 

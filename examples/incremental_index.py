@@ -46,10 +46,12 @@ def main() -> None:
         res, stats = engine.search_ids(q)
         serving.submit(q)
         (resp,) = serving.drain()
+        hot = max(resp.phases, key=resp.phases.get)  # §15 phase breakdown
         print(
             f"  QT1 {q}: cpu {res.size} hits in {stats.seconds * 1e3:.2f} ms "
             f"({stats.bytes_read} B read), jax bucket={resp.bucket} "
-            f"{resp.results['doc'].size} hits in {resp.latency_s * 1e3:.1f} ms"
+            f"{resp.results['doc'].size} hits in {resp.latency_s * 1e3:.1f} ms "
+            f"(dominant phase: {hot}={resp.phases[hot] * 1e3:.1f} ms)"
         )
 
     idx.compact(force=True)

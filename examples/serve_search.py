@@ -32,6 +32,9 @@ def main() -> None:
                          "QT1 queries")
     ap.add_argument("--deadline-ms", type=float, default=50.0,
                     help="per-request budget (<= 0 disables deadlines)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the serving span trees as Chrome JSON "
+                         "trace format (load in https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -73,13 +76,27 @@ def main() -> None:
         print(f"batch latency p50={np.percentile(lat,50)*1000:.1f}ms "
               f"p99={np.percentile(lat,99)*1000:.1f}ms")
         print(f"requests with hits: {n_hits}/{len(responses)}")
+        # every response carries its §15 phase breakdown — where this
+        # round's budget actually went, per request
+        phase_ms = {
+            ph: np.percentile([r.phases[ph] for r in responses], 50) * 1e3
+            for ph in responses[0].phases
+        }
+        print("phase p50: " + "  ".join(
+            f"{ph}={ms:.2f}ms" for ph, ms in phase_ms.items()))
         if deadline_s is not None:
             met = sum(1 for r in responses if r.deadline_met)
             waits = np.array([r.queue_wait_s for r in responses])
+            blames = [r.deadline_blame for r in responses if r.deadline_blame]
+            blame_note = (f"; misses blame "
+                          f"{ {b: blames.count(b) for b in set(blames)} }"
+                          if blames else "")
             print(f"deadline {args.deadline_ms:.0f}ms met: {met}/{len(responses)} "
                   f"({met/len(responses):.1%}); queue wait "
-                  f"p50={np.percentile(waits,50)*1e3:.1f}ms")
-    st = service.stats
+                  f"p50={np.percentile(waits,50)*1e3:.1f}ms{blame_note}")
+    # stats_snapshot(): a deep, consistent copy — never read .stats
+    # directly while another thread might be draining
+    st = service.stats_snapshot()
     print(f"\nbucket histogram: {st['bucket_hist']}")
     print(f"batches: {st['batches']}  paths: {st['paths']}")
     print(f"plan routes: {st['plans']['routes']}  fallbacks: {st['plans']['fallbacks']}")
@@ -90,6 +107,15 @@ def main() -> None:
         print(f"compressed batches: {st['compressed_batches']} "
               f"(offsets fallbacks: {st['offset_fallbacks']})")
         print(f"compressed-row cache: {st['compressed_cache']}")
+    # est_step_cost calibration (§15): measured µs per 1k estimated slots
+    for key, row in sorted(st["plans"]["est_vs_measured"].items()):
+        print(f"measured {key}: est={row['est_step_cost']} slots, "
+              f"p50={row['measured_p50_us']:.0f}us "
+              f"({row['us_per_kslot']:.1f} us/kslot, n={row['n']})")
+    if args.trace_out:
+        trace = service.write_trace(args.trace_out)
+        print(f"wrote {len(trace['traceEvents'])} trace events to "
+              f"{args.trace_out} (open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,9 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request budget; responses report deadline_met "
                          "(<= 0 disables deadlines)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the drain's span tree as Chrome JSON trace "
+                         "format (load in https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     table, lex = generate_corpus(args.n_docs, mean_doc_len=160, vocab_size=40_000, seed=1)
@@ -46,15 +49,27 @@ def main() -> None:
     responses = service.drain()
     wall = time.time() - t0
     lat = np.array([r.latency_s for r in responses])
+    stats = service.stats_snapshot()
     print(
         f"served {len(responses)} requests in {wall:.2f}s ({len(responses)/wall:.1f} qps); "
         f"batch p50={np.percentile(lat, 50)*1e3:.1f}ms p99={np.percentile(lat, 99)*1e3:.1f}ms; "
-        f"buckets={service.stats['bucket_hist']}"
+        f"buckets={stats['bucket_hist']}"
     )
+    phase = service.metrics_snapshot("serve.phase.")
+    breakdown = "  ".join(
+        f"{name.rsplit('.', 1)[-1]}={h['p50']/1e3:.2f}ms"
+        for name, h in phase.items() if h["count"]
+    )
+    print(f"phase p50: {breakdown}")
     if deadline_on:
         met = sum(1 for r in responses if r.deadline_met)
         print(f"deadline {args.deadline_ms:.0f}ms: met {met}/{len(responses)} "
-              f"({met/len(responses):.1%})")
+              f"({met/len(responses):.1%}); miss blame: "
+              f"{stats['deadlines']['miss_blame']}")
+    if args.trace_out:
+        trace = service.write_trace(args.trace_out)
+        print(f"wrote {len(trace['traceEvents'])} trace events to "
+              f"{args.trace_out} (open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

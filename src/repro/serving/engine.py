@@ -94,6 +94,9 @@ class SearchServingEngine:
     def explain(self, lemma_ids):
         return self.service.explain(lemma_ids)
 
+    def stats_snapshot(self) -> dict:
+        return self.service.stats_snapshot()
+
     # -- the old attribute surface -----------------------------------------
     @property
     def index(self):

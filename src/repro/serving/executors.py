@@ -1,5 +1,5 @@
 """Executors: the device/scalar execution layer of the serving tier
-(DESIGN.md §14).
+(DESIGN.md §14), instrumented per phase (DESIGN.md §15).
 
 Two implementations of one :class:`Executor` protocol sit below the
 :class:`repro.serving.service.SearchService` facade:
@@ -17,14 +17,31 @@ Two implementations of one :class:`Executor` protocol sit below the
   :class:`repro.core.search.ProximitySearchEngine` — the correctness
   backstop every ``scalar``-route plan of the dispatch matrix falls
   back to (routing affects latency, never results).
+
+Observability contract (§15): both executors record into the service's
+shared :class:`repro.obs.MetricsRegistry` and :class:`repro.obs.Tracer`.
+Every batch emits a span tree (``batch`` → ``pack`` / ``compress`` /
+``compile`` / ``dispatch`` / ``execute`` / ``decode``) and every
+:class:`ExecResult` carries the same timings as a ``phases`` dict whose
+values tile ``[started_at, finished_at]`` exactly — the service adds
+queue/plan on top, which is how a response's phase breakdown sums to
+its end-to-end latency. Compile time is split from run time by
+first-call detection: the first execution of a (kind, B, L) triple
+ahead-of-time lowers and compiles the step (timed as the ``compile``
+phase, with the XLA ``cost_analysis()`` summary captured off the
+compiled executable); subsequent calls hit the AOT table, so the
+``serve.step.<family>.B<B>.L<L>`` histograms measure pure run time —
+the measured-cost table ``explain(costs=True)`` and admission control
+calibrate ``est_step_cost`` against.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Protocol
 
+import jax
 import numpy as np
 
 from repro.core.jax_search import (
@@ -46,12 +63,21 @@ from repro.core.jax_search import (
     pack_qt34_batch,
     pack_qt5_batch,
 )
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving.planner import (
     PAYLOAD_DELTA16,
     PAYLOAD_OFFSETS,
     PAYLOAD_RAW,
     delta16_aligned,
 )
+
+# the batch-level phases every ExecResult reports; the service prepends
+# "queue" and "plan" (tests assert this exact vocabulary)
+BATCH_PHASES = ("pack", "compress", "compile", "dispatch", "execute", "decode")
+
+
+def zero_phases() -> dict:
+    return {p: 0.0 for p in BATCH_PHASES}
 
 
 @dataclass
@@ -62,7 +88,9 @@ class ExecResult:
     in-block span overflows uint16), ``latency_s`` the wall-clock of
     the whole batch the request rode in, ``started_at``/``finished_at``
     the perf_counter timestamps of *that batch* (not the whole group:
-    the service derives queue waits and deadline verdicts per batch)."""
+    the service derives queue waits and deadline verdicts per batch),
+    and ``phases`` the batch's per-phase durations in seconds —
+    contiguous sub-intervals tiling [started_at, finished_at]."""
 
     results: dict
     latency_s: float
@@ -71,6 +99,7 @@ class ExecResult:
     payload: str | None = None
     started_at: float = 0.0
     finished_at: float = 0.0
+    phases: dict = field(default_factory=zero_phases)
 
 
 class Executor(Protocol):
@@ -91,6 +120,28 @@ def _payload_of_kind(kind: str) -> str:
     return _PAYLOAD_OF_KIND[kind.rsplit("_", 1)[-1] if "_" in kind else kind]
 
 
+def xla_cost_summary(compiled) -> dict | None:
+    """The interesting scalars of an XLA ``cost_analysis()`` — flops,
+    bytes accessed, transcendentals — tolerant of the list-vs-dict
+    return shape across jax versions. None when the backend does not
+    implement cost analysis."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return None
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return None
+    out = {}
+    for key in ("flops", "bytes accessed", "transcendentals",
+                "optimal_seconds"):
+        v = ca.get(key)
+        if v is not None:
+            out[key.replace(" ", "_")] = float(v)
+    return out
+
+
 class CompiledExecutor:
     """Packs, compresses and executes padded batches on the compiled
     per-(step kind, B-bucket, L-bucket) serve steps.
@@ -98,18 +149,32 @@ class CompiledExecutor:
     ``executables`` maps every (kind, B, L) triple ever executed to its
     batch count — the engine-stats surface tests assert B-bucket
     sharing on; ``stats["shared_batches"]`` counts qt34 groups served
-    on qt5 executables."""
+    on qt5 executables. ``compile_times`` / ``cost_summaries`` hold the
+    first-call AOT compile wall-clock and XLA cost_analysis summary per
+    triple; measured run times stream into the metrics registry as
+    ``serve.step.<family>.B<B>.L<L>`` histograms (µs)."""
 
-    def __init__(self, mesh, config, pack_cache=None, compressed_cache=None):
+    def __init__(self, mesh, config, pack_cache=None, compressed_cache=None,
+                 metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         self.mesh = mesh
         self.config = config
         self.pack_cache = pack_cache
         self.compressed_cache = compressed_cache
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         # compiled steps, one per (step family, payload format); jit
         # caches per (B, L) shape under each, and batch_size_bucket
         # bounds how many shapes each one ever sees
         self._steps: dict[str, object] = {}
         self.executables: dict[tuple, int] = {}
+        # (kind, B, L) -> AOT-compiled executable (or the jit fallback
+        # when lowering failed); built on first execution of the triple
+        self._aot: dict[tuple, object] = {}
+        self.compile_times: dict[tuple, float] = {}
+        self.cost_summaries: dict[tuple, dict | None] = {}
+        # (family, B, L) triples with measured run-time histograms
+        self.measured_keys: set[tuple] = set()
         # delta-format eligibility on the cache-less compressed path is
         # static per (family, bucket) and goes sticky-False after a
         # uint16 span overflow so persistent-overflow corpora don't pay
@@ -117,7 +182,8 @@ class CompiledExecutor:
         # the verdict is per key instead)
         self._delta_ok: dict[tuple, bool] = {}
         self.stats = {"batches": 0, "compressed_batches": 0,
-                      "offset_fallbacks": 0, "shared_batches": 0}
+                      "offset_fallbacks": 0, "shared_batches": 0,
+                      "compiles": 0}
 
     @property
     def n_executables(self) -> int:
@@ -171,51 +237,194 @@ class CompiledExecutor:
         for lo in range(0, len(queries), cfg.max_batch):
             chunk_q = queries[lo:lo + cfg.max_batch]
             chunk_s = selections[lo:lo + cfg.max_batch]
-            t0 = time.perf_counter()
             B_pad = batch_size_bucket(len(chunk_q), cfg.max_batch)
             pad = B_pad - len(chunk_q)
-            kind, decoded = self._run(
-                index, step_family, bucket,
-                chunk_q + [[]] * pad, chunk_s + [None] * pad,
-            )
-            t1 = time.perf_counter()
+            with self.tracer.span("batch", family=step_family, bucket=bucket,
+                                  B=B_pad, n=len(chunk_q)) as bsp:
+                t0 = time.perf_counter()
+                kind, stub, args, t_pack, t_comp = self._prepare(
+                    index, step_family, bucket,
+                    chunk_q + [[]] * pad, chunk_s + [None] * pad, t0,
+                )
+                key = (kind, B_pad, bucket)
+                fn, first = self._executable_for(key, kind,
+                                                 index.max_distance, args)
+                t_compile = time.perf_counter()
+                with self.tracer.span("dispatch", kind=kind):
+                    raw = self._call(key, fn, kind, index.max_distance, args)
+                t_disp = time.perf_counter()
+                with self.tracer.span("execute", kind=kind, compile=first):
+                    raw = jax.block_until_ready(raw)
+                t_exec = time.perf_counter()
+                with self.tracer.span("decode"):
+                    decoded = decode_results(stub, *raw)
+                t1 = time.perf_counter()
+                bsp.set(kind=kind, compile=first)
+            phases = {
+                "pack": t_pack - t0,
+                "compress": t_comp - t_pack,
+                "compile": t_compile - t_comp,
+                "dispatch": t_disp - t_compile,
+                "execute": t_exec - t_disp,
+                "decode": t1 - t_exec,
+            }
             self.stats["batches"] += 1
             if shared is not None and any(shared[lo:lo + cfg.max_batch]):
                 self.stats["shared_batches"] += 1
-            self.executables[(kind, B_pad, bucket)] = (
-                self.executables.get((kind, B_pad, bucket), 0) + 1
-            )
+            self.executables[key] = self.executables.get(key, 0) + 1
+            if not first:
+                # measured step cost = dispatch + device execute, run-only
+                # (first calls on the jit fallback would fold compile in)
+                self.metrics.observe(
+                    f"serve.step.{step_family}.B{B_pad}.L{bucket}",
+                    (t_exec - t_compile) * 1e6,
+                )
+                self.measured_keys.add((step_family, B_pad, bucket))
             payload = _payload_of_kind(kind)
             out.extend(
                 ExecResult(results=decoded[bi], latency_s=t1 - t0,
                            bucket=bucket, batch_size=len(chunk_q),
-                           payload=payload, started_at=t0, finished_at=t1)
+                           payload=payload, started_at=t0, finished_at=t1,
+                           phases=dict(phases))
                 for bi in range(len(chunk_q))
             )
         return out
 
-    def _run(self, index, family, bucket, queries, selections):
-        """Pack + execute one padded batch; returns (kind, decoded)."""
+    # -- compile-vs-run split ----------------------------------------------
+    def _executable_for(self, key, kind, max_distance, args):
+        """The executable for one (kind, B, L) triple. First call per
+        triple AOT-lowers and compiles the step (the ``compile`` phase)
+        and captures its XLA cost_analysis summary; later calls return
+        the cached executable, so their step timings are pure run."""
+        fn = self._aot.get(key)
+        if fn is not None:
+            return fn, False
+        step = self._step(kind, max_distance)
+        with self.tracer.span("compile", kind=kind, B=key[1], L=key[2]):
+            t0 = time.perf_counter()
+            try:
+                compiled = step.lower(*args).compile()
+                self.cost_summaries[key] = xla_cost_summary(compiled)
+                fn = compiled
+            except Exception:
+                # lowering is best-effort: fall back to the jit-cached
+                # step (compile then happens inside the first dispatch,
+                # so the split degrades gracefully instead of failing)
+                self.cost_summaries[key] = None
+                fn = step
+            dt = time.perf_counter() - t0
+        self._aot[key] = fn
+        self.compile_times[key] = dt
+        self.stats["compiles"] += 1
+        self.metrics.observe(
+            f"serve.compile.{kind}.B{key[1]}.L{key[2]}", dt * 1e6)
+        return fn, True
+
+    def _call(self, key, fn, kind, max_distance, args):
+        try:
+            return fn(*args)
+        except (TypeError, ValueError):
+            if fn is self._steps.get(kind):
+                raise
+            # an AOT executable is stricter about input avals than jit;
+            # if a batch ever disagrees, demote the triple to the jit
+            # step permanently rather than failing the drain
+            step = self._step(kind, max_distance)
+            self._aot[key] = step
+            return step(*args)
+
+    # -- measured-cost surface ---------------------------------------------
+    def measured_cost(self, family: str, bucket: int) -> dict:
+        """Measured run-time percentiles for every B-bucket of one
+        (step_family, L-bucket) executable, plus its compile time and
+        XLA cost summary — the calibration table for ``est_step_cost``
+        (µs; empty until a second batch of the shape has run)."""
+        out = {}
+        for (fam, B, L) in sorted(self.measured_keys):
+            if fam != family or L != bucket:
+                continue
+            hist = self.metrics.get(f"serve.step.{fam}.B{B}.L{L}")
+            if hist is None or hist.count == 0:
+                continue
+            snap = hist.snapshot()
+            entry = {"measured_p50_us": snap["p50"],
+                     "measured_p95_us": snap["p95"],
+                     "measured_p99_us": snap["p99"],
+                     "count": snap["count"]}
+            for (kind, kb, kl), dt in self.compile_times.items():
+                if kb == B and kl == L and _kind_family(kind) == fam:
+                    entry["compile_us"] = dt * 1e6
+                    xla = self.cost_summaries.get((kind, kb, kl))
+                    if xla:
+                        entry["xla"] = xla
+                    break
+            out[f"B{B}"] = entry
+        return out
+
+    def est_vs_measured(self, streams_of) -> dict:
+        """est_step_cost calibration: per measured (family, B, L), the
+        planner's estimate (padded posting slots) against the measured
+        run-time p50 — ``us_per_kslot`` is the live conversion factor
+        admission control needs to turn an estimate into a time budget."""
+        cfg = self.config
+        out = {}
+        for (fam, B, L) in sorted(self.measured_keys):
+            hist = self.metrics.get(f"serve.step.{fam}.B{B}.L{L}")
+            if hist is None or hist.count == 0:
+                continue
+            est = streams_of(fam, cfg) * L * cfg.doc_shards
+            p50 = hist.percentile(50)
+            out[f"{fam}/B{B}/L{L}"] = {
+                "est_step_cost": est,
+                "measured_p50_us": p50,
+                "n": hist.count,
+                "us_per_kslot": p50 / (est / 1000.0),
+            }
+        return out
+
+    # -- batch preparation --------------------------------------------------
+    def _prepare(self, index, family, bucket, queries, selections, t0):
+        """Pack (and compress) one padded batch; returns
+        ``(kind, decode stub, device args, t_pack_end, t_compress_end)``
+        so the caller can tile the phase timeline without gaps."""
         assemble_fn, pack_fn, compress_fn, prefix, kw = self._family_fns(family)
         cfg = self.config
         ccache = self.compressed_cache
-        d = index.max_distance
         if cfg.compressed and ccache is not None:
-            kind, args, stub = assemble_fn(
-                index, queries, L=bucket, doc_shards=cfg.doc_shards,
-                ccache=ccache, cache=self.pack_cache, plans=selections, **kw,
-            )
+            # the per-key compressed-row cache derives raw + compressed
+            # rows in one pass, so pack and compress are one phase here
+            # (attributed to pack; compress reads 0)
+            with self.tracer.span("pack", family=family, cached=True):
+                kind, args, stub = assemble_fn(
+                    index, queries, L=bucket, doc_shards=cfg.doc_shards,
+                    ccache=ccache, cache=self.pack_cache, plans=selections,
+                    **kw,
+                )
             self._count_compressed(kind)
-            return kind, decode_results(stub, *self._step(kind, d)(*args))
-        batch = pack_fn(
-            index, queries, L=bucket, doc_shards=cfg.doc_shards,
-            cache=self.pack_cache, plans=selections, **kw,
-        )
+            t_pack = time.perf_counter()
+            return kind, stub, args, t_pack, t_pack
         if not cfg.compressed:
             kind = "base" if family == "qt1" else f"{family}_raw"
-            return kind, decode_results(batch, *self._step(kind, d)(*batch.device_args()))
-        kind, args = self._compress_batch(bucket, batch, compress_fn, prefix)
-        return kind, decode_results(batch, *self._step(kind, d)(*args))
+            with self.tracer.span("pack", family=family):
+                batch = pack_fn(
+                    index, queries, L=bucket, doc_shards=cfg.doc_shards,
+                    cache=self.pack_cache, plans=selections, **kw,
+                )
+                # the host->device transfer of the packed rows belongs
+                # to pack, not to whatever phase is timed next
+                args = batch.device_args()
+            t_pack = time.perf_counter()
+            return kind, batch, args, t_pack, t_pack
+        with self.tracer.span("pack", family=family):
+            batch = pack_fn(
+                index, queries, L=bucket, doc_shards=cfg.doc_shards,
+                cache=self.pack_cache, plans=selections, **kw,
+            )
+        t_pack = time.perf_counter()
+        with self.tracer.span("compress", family=family):
+            kind, args = self._compress_batch(bucket, batch, compress_fn,
+                                              prefix)
+        return kind, batch, args, t_pack, time.perf_counter()
 
     def _compress_batch(self, bucket, batch, compress_fn, prefix=""):
         """Cache-less compressed path: whole-batch re-encode with the
@@ -244,15 +453,27 @@ class CompiledExecutor:
             self.stats["offset_fallbacks"] += 1
 
 
+def _kind_family(kind: str) -> str:
+    """Step-kind -> step-family name ("base"/"delta"/"offsets" are the
+    qt1 payload kinds; everything else is "<family>_<payload>")."""
+    return kind.split("_", 1)[0] if "_" in kind else "qt1"
+
+
 class ScalarExecutor:
     """The scalar correctness backstop: wraps a per-snapshot
     :class:`ProximitySearchEngine` behind the same Executor protocol —
     every dispatch-matrix shape the static-shape steps cannot express
     is served here, bit-identical to the reference the compiled paths
-    are tested against."""
+    are tested against. Responses carry the same timing surface as the
+    compiled path (started_at/finished_at + a phase breakdown whose
+    work all lands in ``execute``), so scalar-fallback traffic is
+    first-class in deadline and phase accounting."""
 
-    def __init__(self, config):
+    def __init__(self, config, metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         self.config = config
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         self._engine = None  # rebuilt per snapshot on first use
 
     def _engine_for(self, index):
@@ -268,16 +489,21 @@ class ScalarExecutor:
                 bucket=None, shared=None):
         eng = self._engine_for(index)
         out = []
-        for q in queries:
-            t0 = time.perf_counter()
-            res, _ = eng.search_ids(list(q))
-            t1 = time.perf_counter()
-            out.append(ExecResult(
-                results={"doc": res.doc, "start": res.start, "end": res.end,
-                         "score": res.score},
-                latency_s=t1 - t0, bucket=0, batch_size=1,
-                started_at=t0, finished_at=t1,
-            ))
+        with self.tracer.span("batch", family="scalar", n=len(queries)):
+            for q in queries:
+                t0 = time.perf_counter()
+                with self.tracer.span("execute", kind="scalar"):
+                    res, _ = eng.search_ids(list(q))
+                t1 = time.perf_counter()
+                self.metrics.observe("serve.step.scalar", (t1 - t0) * 1e6)
+                phases = zero_phases()
+                phases["execute"] = t1 - t0
+                out.append(ExecResult(
+                    results={"doc": res.doc, "start": res.start,
+                             "end": res.end, "score": res.score},
+                    latency_s=t1 - t0, bucket=0, batch_size=1,
+                    started_at=t0, finished_at=t1, phases=phases,
+                ))
         return out
 
 

@@ -37,11 +37,18 @@ served.
 Bounded by both an entry count and a byte budget (LRU eviction); hits,
 misses, evictions, invalidations, retentions and resident bytes are
 surfaced via ``.stats`` and re-exported in ``SearchServingEngine.stats``.
+Given a :class:`repro.obs.MetricsRegistry` (``metrics=``, with a
+``scope`` name prefix), the cache additionally streams hit/miss
+counters, a resident-bytes gauge and a per-miss derivation-time
+histogram into it (DESIGN.md §15) — the same registry the serving
+phases land in, so a drain's pack phase can be decomposed into cache
+hits vs row derivations.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 
 import numpy as np
@@ -100,12 +107,15 @@ class PackedPostingCache:
     """LRU cache of padded per-key device rows for one snapshot."""
 
     def __init__(self, max_entries: int = 4096, max_bytes: int = 256 << 20,
-                 source: "PackedPostingCache | None" = None):
+                 source: "PackedPostingCache | None" = None,
+                 metrics=None, scope: str = "cache"):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
         self.max_bytes = max_bytes
         self.source = source  # raw-row cache compressed kinds derive from
+        self._metrics = metrics  # optional repro.obs.MetricsRegistry
+        self._scope = scope
         self._entries: OrderedDict = OrderedDict()  # positive: ck -> (rows, nbytes)
         self._absent: OrderedDict = OrderedDict()  # negative: ck -> rows
         self._token = None
@@ -159,16 +169,26 @@ class PackedPostingCache:
             if ent is not None:
                 self._entries.move_to_end(ck)
                 self._counts["hits"] += 1
+                if self._metrics is not None:
+                    self._metrics.inc(f"{self._scope}.hits")
                 return ent[0]
             neg = self._absent.get(ck)
             if neg is not None:
                 self._absent.move_to_end(ck)
                 self._counts["hits"] += 1
+                if self._metrics is not None:
+                    self._metrics.inc(f"{self._scope}.hits")
                 return neg
             self._counts["misses"] += 1
         # derive outside the lock: merged segment reads can be slow and
         # must not serialize concurrent serving threads
+        t_derive = time.perf_counter()
         rows = self._derive(index, kind, key, L, doc_shards, stride)
+        if self._metrics is not None:
+            self._metrics.inc(f"{self._scope}.misses")
+            self._metrics.observe(f"{self._scope}.derive_us",
+                                  (time.perf_counter() - t_derive) * 1e6)
+            self._metrics.set(f"{self._scope}.bytes", self._bytes)
         if not rows[-1]:  # not present
             # negative entry: callers never read non-present rows, so they
             # alias one shared per-(kind, L) padding row set (0 bytes) and

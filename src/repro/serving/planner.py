@@ -92,7 +92,12 @@ class QueryPlan:
     * ``fallback_reason`` — machine-readable, set iff route is
       ``scalar``;
     * ``selection`` — the memoized key selection the packers consume
-      ((f,s,t) keys / ordered (w,v) keys / the qt34/qt5 plan tuple)."""
+      ((f,s,t) keys / ordered (w,v) keys / the qt34/qt5 plan tuple);
+    * ``measured`` — never set by ``plan()`` (the function stays pure);
+      ``SearchService.explain(q, costs=True)`` attaches the §15
+      measured-cost record here (per-B run-time percentiles, compile
+      time, XLA cost summary, est-vs-measured ratio) on a *copy* of the
+      memoized plan."""
 
     qtype: QueryType | None
     route: str
@@ -102,6 +107,7 @@ class QueryPlan:
     est_step_cost: int | None = None
     fallback_reason: str | None = None
     selection: object = None
+    measured: dict | None = None
 
     @property
     def is_compiled(self) -> bool:

@@ -21,17 +21,20 @@ contract instead of an implicit property of a compiled step.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.obs import MetricsRegistry, Tracer, chrome_trace, write_chrome_trace
 from repro.serving import planner as _planner
 from repro.serving.executors import (
     CompiledExecutor,
     ExecResult,
     ScalarExecutor,
     empty_results,
+    zero_phases,
 )
 from repro.serving.pack_cache import PackedPostingCache
 from repro.serving.planner import QueryPlan
@@ -57,7 +60,11 @@ class ServeConfig:
       of the same (B, L), and are batched together with qt5 traffic
       (DESIGN.md §14);
     * ``default_deadline_s`` — deadline attached to submits that don't
-      pass one (None = no deadline)."""
+      pass one (None = no deadline);
+    * ``trace_enabled`` / ``trace_capacity`` — the §15 span tracer (a
+      bounded ring of completed spans; disabling reduces the obs
+      overhead to the per-phase timestamps);
+    * ``metrics_capacity`` — samples retained per latency histogram."""
 
     buckets: tuple = (1024, 4096, 16384, 65536)
     max_batch: int = 64
@@ -76,6 +83,9 @@ class ServeConfig:
     r_max: int = 4
     share_buckets: bool = True
     default_deadline_s: float | None = None
+    trace_enabled: bool = True
+    trace_capacity: int = 8192
+    metrics_capacity: int = 4096
 
     def __post_init__(self):
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
@@ -119,7 +129,19 @@ class SearchResponse:
     reflects the format actually executed), ``deadline_met`` whether
     resolution beat the ticket's budget (None when no deadline was
     set), ``queue_wait_s`` the time between submit and its batch
-    starting execution."""
+    starting execution.
+
+    Observability surface (DESIGN.md §15): ``phases`` maps every phase
+    of the request's life to its duration in seconds — ``queue`` (submit
+    → its batch starting), ``plan``, then the batch phases ``pack`` /
+    ``compress`` / ``compile`` / ``dispatch`` / ``execute`` / ``decode``
+    — and sums to the end-to-end latency ``finished_at - arrival``
+    (within the tiny planning overlap; tests pin 10%).
+    ``started_at``/``finished_at`` are the perf_counter bounds of the
+    batch that served it, on every route including scalar fallback and
+    empty. ``deadline_blame`` names the largest non-queue phase when
+    the deadline was missed — a missed budget names the phase that blew
+    it — and the queue when waiting alone exceeded the budget."""
 
     results: dict
     latency_s: float
@@ -129,6 +151,15 @@ class SearchResponse:
     plan: QueryPlan | None = None
     deadline_met: bool | None = None
     queue_wait_s: float = 0.0
+    phases: dict = field(default_factory=dict)
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    deadline_blame: str | None = None
+
+    @property
+    def e2e_s(self) -> float:
+        """End-to-end submit → resolution latency (queue wait included)."""
+        return self.queue_wait_s + (self.finished_at - self.started_at)
 
 
 def _route_to_path(route: str) -> str:
@@ -173,9 +204,16 @@ class SearchService:
             )
         self.mesh = mesh
         cfg = self.config
+        # §15 observability tier: one registry + tracer per service,
+        # shared by the executors and both row caches so every layer's
+        # timings land in the same place
+        self.metrics = MetricsRegistry(histogram_capacity=cfg.metrics_capacity)
+        self.tracer = Tracer(capacity=cfg.trace_capacity,
+                             enabled=cfg.trace_enabled)
         self.pack_cache = (
             PackedPostingCache(max_entries=cfg.cache_entries,
-                               max_bytes=cfg.cache_bytes)
+                               max_bytes=cfg.cache_bytes,
+                               metrics=self.metrics, scope="cache.pack")
             if cfg.use_pack_cache
             else None
         )
@@ -185,17 +223,22 @@ class SearchService:
         self.compressed_cache = (
             PackedPostingCache(max_entries=cfg.cache_entries,
                                max_bytes=cfg.cache_bytes,
-                               source=self.pack_cache)
+                               source=self.pack_cache,
+                               metrics=self.metrics,
+                               scope="cache.compressed")
             if cfg.compressed and cfg.use_compressed_cache
             else None
         )
         self.compiled = CompiledExecutor(
             mesh, cfg, pack_cache=self.pack_cache,
             compressed_cache=self.compressed_cache,
+            metrics=self.metrics, tracer=self.tracer,
         )
-        self.scalar = ScalarExecutor(cfg)
+        self.scalar = ScalarExecutor(cfg, metrics=self.metrics,
+                                     tracer=self.tracer)
         self._queue: list[SearchTicket] = []
         self._queue_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
         # per-snapshot lemma ids -> QueryPlan; validity is tied to the
         # *pinned view's identity* (not to refresh() clearing it: a
         # drain racing a refresh could otherwise re-insert a stale
@@ -219,8 +262,10 @@ class SearchService:
                 "fallbacks": {},
                 "executables": 0,
                 "shared_batches": 0,
+                "est_vs_measured": {},
             },
-            "deadlines": {"met": 0, "missed": 0, "unset": 0},
+            "deadlines": {"met": 0, "missed": 0, "unset": 0,
+                          "miss_blame": {}},
             "pack_cache": {}, "compressed_cache": {},
         }
 
@@ -240,15 +285,39 @@ class SearchService:
         self._plan_memo[memo_key] = p
         return p
 
-    def explain(self, lemma_ids) -> QueryPlan:
+    def explain(self, lemma_ids, costs: bool = False) -> QueryPlan:
         """The :class:`QueryPlan` this request would execute under —
         route, executable family, L-bucket, payload, estimated step
         cost, fallback reason — without executing anything. Planned
         against the currently pinned snapshot with the same memo the
         next drain will use, so ``explain(q)`` and the executed
         ``response.plan`` agree (tests/test_planner.py pins this per
-        dispatch-matrix row)."""
-        return self._plan(self.index, lemma_ids)
+        dispatch-matrix row).
+
+        With ``costs=True`` the returned plan additionally carries
+        ``measured`` — the §15 calibration record for the same
+        (step_family, L-bucket) executable family: per-B measured
+        run-time percentiles from the live ``serve.step.*`` histograms,
+        the first-call compile time, the XLA ``cost_analysis()``
+        summary, and ``us_per_kslot`` (measured p50 per thousand
+        ``est_step_cost`` slots — the est-vs-measured ratio). The
+        cost-annotated plan is a fresh object (the memoized plan stays
+        identity-stable); ``measured`` is None off-device or before any
+        warm batch of the shape has run."""
+        p = self._plan(self.index, lemma_ids)
+        if not costs:
+            return p
+        measured = None
+        if p.is_compiled:
+            table = self.compiled.measured_cost(p.step_family, p.bucket)
+            if table:
+                est = p.est_step_cost
+                for entry in table.values():
+                    entry["us_per_kslot"] = (
+                        entry["measured_p50_us"] / (est / 1000.0)
+                    )
+                measured = {"est_step_cost": est, "executables": table}
+        return dataclasses.replace(p, measured=measured)
 
     # -- lifecycle ---------------------------------------------------------
     def refresh(self) -> None:
@@ -308,52 +377,75 @@ class SearchService:
         # silently dropped into the already-grouped list
         with self._queue_lock:
             pending, self._queue = self._queue, []
+        t_drain0 = time.perf_counter()
         slots: list = [None] * len(pending)
-        plans = [self._plan(index, t.lemma_ids) for t in pending]
-        groups: dict[tuple, list[int]] = {}
-        for i, p in enumerate(plans):
-            if p.route == _planner.ROUTE_EMPTY:
-                key = ("empty", None)
-            elif p.route == _planner.ROUTE_SCALAR:
-                key = ("scalar", None)
-            else:
-                key = (p.step_family, p.bucket)
-            groups.setdefault(key, []).append(i)
+        with self.tracer.span("drain", requests=len(pending)):
+            # per-request planning time is part of the phase breakdown
+            # (memoized hits are sub-µs; misses scan posting counts)
+            plans, plan_s = [], []
+            with self.tracer.span("plan", n=len(pending)):
+                for t in pending:
+                    tp0 = time.perf_counter()
+                    plans.append(self._plan(index, t.lemma_ids))
+                    plan_s.append(time.perf_counter() - tp0)
+            with self.tracer.span("group"):
+                groups: dict[tuple, list[int]] = {}
+                for i, p in enumerate(plans):
+                    if p.route == _planner.ROUTE_EMPTY:
+                        key = ("empty", None)
+                    elif p.route == _planner.ROUTE_SCALAR:
+                        key = ("scalar", None)
+                    else:
+                        key = (p.step_family, p.bucket)
+                    groups.setdefault(key, []).append(i)
 
-        def urgency(item):
-            _, idxs = item
-            deadline = min(
-                (pending[i].arrival + pending[i].deadline_s
-                 for i in idxs if pending[i].deadline_s is not None),
-                default=float("inf"),
-            )
-            return (deadline, -len(idxs))
+                def urgency(item):
+                    _, idxs = item
+                    deadline = min(
+                        (pending[i].arrival + pending[i].deadline_s
+                         for i in idxs if pending[i].deadline_s is not None),
+                        default=float("inf"),
+                    )
+                    return (deadline, -len(idxs))
 
-        for (family, bucket), idxs in sorted(groups.items(), key=urgency):
-            if family == "empty":
-                now = time.perf_counter()
-                for i in idxs:
-                    self._resolve(pending[i], plans[i], slots, i, ExecResult(
-                        results=empty_results(), latency_s=0.0, bucket=0,
-                        batch_size=1, started_at=now, finished_at=now,
-                    ))
-                continue
-            queries = [pending[i].lemma_ids for i in idxs]
-            if family == "scalar":
-                execs = self.scalar.execute(index, queries,
-                                            [None] * len(idxs),
-                                            step_family=None, bucket=None)
-            else:
-                sels = [self._selection_for(plans[i], family) for i in idxs]
-                shared = [plans[i].route != family for i in idxs]
-                execs = self.compiled.execute(index, queries, sels,
-                                              step_family=family,
-                                              bucket=bucket, shared=shared)
-                if bucket in self.stats["bucket_hist"]:
-                    mb = self.config.max_batch
-                    self.stats["bucket_hist"][bucket] += -(-len(idxs) // mb)
-            for i, ex in zip(idxs, execs):
-                self._resolve(pending[i], plans[i], slots, i, ex)
+                order = sorted(groups.items(), key=urgency)
+
+            for (family, bucket), idxs in order:
+                if family == "empty":
+                    now = time.perf_counter()
+                    for i in idxs:
+                        self._resolve(
+                            pending[i], plans[i], slots, i,
+                            ExecResult(results=empty_results(), latency_s=0.0,
+                                       bucket=0, batch_size=1, started_at=now,
+                                       finished_at=now),
+                            plan_s[i],
+                        )
+                    continue
+                queries = [pending[i].lemma_ids for i in idxs]
+                if family == "scalar":
+                    execs = self.scalar.execute(index, queries,
+                                                [None] * len(idxs),
+                                                step_family=None, bucket=None)
+                else:
+                    sels = [self._selection_for(plans[i], family) for i in idxs]
+                    shared = [plans[i].route != family for i in idxs]
+                    execs = self.compiled.execute(index, queries, sels,
+                                                  step_family=family,
+                                                  bucket=bucket, shared=shared)
+                    if bucket in self.stats["bucket_hist"]:
+                        mb = self.config.max_batch
+                        with self._stats_lock:
+                            self.stats["bucket_hist"][bucket] += (
+                                -(-len(idxs) // mb)
+                            )
+                for i, ex in zip(idxs, execs):
+                    self._resolve(pending[i], plans[i], slots, i, ex,
+                                  plan_s[i])
+        self.metrics.observe(
+            "serve.drain.total",
+            (time.perf_counter() - t_drain0) * 1e6,
+        )
         self._finish_stats(plans)
         return slots
 
@@ -366,44 +458,127 @@ class SearchService:
             return anchor, others, (), counts
         return p.selection
 
-    def _resolve(self, ticket, p: QueryPlan, slots, i, ex: ExecResult) -> None:
+    def _resolve(self, ticket, p: QueryPlan, slots, i, ex: ExecResult,
+                 plan_dt: float = 0.0) -> None:
         # deadline and queue wait are judged against *this request's
         # batch* (its ExecResult timestamps), not the whole group — in a
         # multi-chunk group, earlier chunks resolve earlier
+        queue_wait = max(ex.started_at - ticket.arrival, 0.0)
+        # the per-request phase breakdown (§15): queue + plan + the
+        # batch phases. The batch phases tile [started_at, finished_at]
+        # and queue tiles [arrival, started_at], so the values sum to
+        # the end-to-end latency (plan overlaps the queue window but is
+        # orders of magnitude smaller; tests pin agreement within 10%)
+        phases = {"queue": queue_wait, "plan": plan_dt}
+        phases.update(ex.phases if ex.phases else zero_phases())
         met = None
+        blame = None
+        e2e = ex.finished_at - ticket.arrival
         if ticket.deadline_s is not None:
-            met = (ex.finished_at - ticket.arrival) <= ticket.deadline_s
-            self.stats["deadlines"]["met" if met else "missed"] += 1
+            met = e2e <= ticket.deadline_s
+            if not met:
+                # name the phase that blew the budget: queue when
+                # waiting alone exceeded it, else the slowest work phase
+                if queue_wait > ticket.deadline_s:
+                    blame = "queue"
+                else:
+                    blame = max(
+                        (ph for ph in phases if ph != "queue"),
+                        key=lambda ph: phases[ph],
+                    )
+            with self._stats_lock:
+                dl = self.stats["deadlines"]
+                dl["met" if met else "missed"] += 1
+                if blame is not None:
+                    dl["miss_blame"][blame] = (
+                        dl["miss_blame"].get(blame, 0) + 1
+                    )
         else:
-            self.stats["deadlines"]["unset"] += 1
+            with self._stats_lock:
+                self.stats["deadlines"]["unset"] += 1
+        m = self.metrics
+        for name, dur in phases.items():
+            m.observe(f"serve.phase.{name}", dur * 1e6)
+        m.observe("serve.request.e2e", e2e * 1e6)
+        if blame is not None:
+            m.inc(f"serve.deadline.miss_blame.{blame}")
         executed = p if ex.payload in (None, p.payload) \
             else dataclasses.replace(p, payload=ex.payload)
         resp = SearchResponse(
             results=ex.results, latency_s=ex.latency_s, bucket=ex.bucket,
             batch_size=ex.batch_size, path=_route_to_path(p.route),
-            plan=executed, deadline_met=met,
-            queue_wait_s=max(ex.started_at - ticket.arrival, 0.0),
+            plan=executed, deadline_met=met, queue_wait_s=queue_wait,
+            phases=phases, started_at=ex.started_at,
+            finished_at=ex.finished_at, deadline_blame=blame,
         )
         ticket.response = resp
         slots[i] = resp
 
     def _finish_stats(self, plans: list[QueryPlan]) -> None:
-        st = self.stats
-        st["requests"] += len(plans)
-        routes = st["plans"]["routes"]
-        for p in plans:
-            routes[p.route] = routes.get(p.route, 0) + 1
-            st["paths"][_route_to_path(p.route)] += 1
-            if p.fallback_reason is not None:
-                fb = st["plans"]["fallbacks"]
-                fb[p.fallback_reason] = fb.get(p.fallback_reason, 0) + 1
         ex = self.compiled
-        st["batches"] = ex.stats["batches"]
-        st["compressed_batches"] = ex.stats["compressed_batches"]
-        st["offset_fallbacks"] = ex.stats["offset_fallbacks"]
-        st["plans"]["executables"] = ex.n_executables
-        st["plans"]["shared_batches"] = ex.stats["shared_batches"]
+        est_vs_measured = ex.est_vs_measured(_planner._streams)
+        pack_stats = (self.pack_cache.stats
+                      if self.pack_cache is not None else None)
+        comp_stats = (self.compressed_cache.stats
+                      if self.compressed_cache is not None else None)
+        with self._stats_lock:
+            st = self.stats
+            st["requests"] += len(plans)
+            routes = st["plans"]["routes"]
+            for p in plans:
+                routes[p.route] = routes.get(p.route, 0) + 1
+                st["paths"][_route_to_path(p.route)] += 1
+                if p.fallback_reason is not None:
+                    fb = st["plans"]["fallbacks"]
+                    fb[p.fallback_reason] = fb.get(p.fallback_reason, 0) + 1
+            st["batches"] = ex.stats["batches"]
+            st["compressed_batches"] = ex.stats["compressed_batches"]
+            st["offset_fallbacks"] = ex.stats["offset_fallbacks"]
+            st["plans"]["executables"] = ex.n_executables
+            st["plans"]["shared_batches"] = ex.stats["shared_batches"]
+            st["plans"]["est_vs_measured"] = est_vs_measured
+            if pack_stats is not None:
+                st["pack_cache"] = pack_stats
+            if comp_stats is not None:
+                st["compressed_cache"] = comp_stats
+
+    # -- observability (DESIGN.md §15) -------------------------------------
+    def stats_snapshot(self) -> dict:
+        """A deep, consistent copy of :attr:`stats`, with the cache
+        stats re-read fresh. ``stats`` itself is mutated in place during
+        :meth:`drain` — a concurrent reader iterating it can see
+        half-updated counters (or hit a dict-size-changed error); this
+        snapshot is taken under the same lock the mutators hold, so the
+        counters in one snapshot are mutually consistent. Benchmarks and
+        examples read this, never ``stats`` directly."""
+        with self._stats_lock:
+            snap = copy.deepcopy(self.stats)
+        # cache stats properties already return fresh dicts under the
+        # cache's own lock; re-read them so the snapshot is current even
+        # between drains
         if self.pack_cache is not None:
-            st["pack_cache"] = self.pack_cache.stats
+            snap["pack_cache"] = self.pack_cache.stats
         if self.compressed_cache is not None:
-            st["compressed_cache"] = self.compressed_cache.stats
+            snap["compressed_cache"] = self.compressed_cache.stats
+        return snap
+
+    def metrics_snapshot(self, prefix: str = "") -> dict:
+        """Plain-data snapshot of the metrics registry (counters,
+        gauges, histogram percentiles) — ``prefix`` filters by dotted
+        name (``"serve.phase."`` for the request phase breakdown)."""
+        return self.metrics.snapshot(prefix)
+
+    def trace_snapshot(self) -> dict:
+        """The recorded span buffer as a Chrome JSON trace object —
+        ``json.dump`` it and load the file in https://ui.perfetto.dev
+        (or pass ``--trace-out`` to ``launch/serve.py`` /
+        ``examples/serve_search.py``). One span tree per drain:
+        ``drain`` → ``plan`` / ``group`` / per-batch ``batch`` →
+        ``pack``/``compress``/``compile``/``dispatch``/``execute``/
+        ``decode``."""
+        return chrome_trace(self.tracer.snapshot())
+
+    def write_trace(self, path: str) -> dict:
+        """Write :meth:`trace_snapshot` to ``path``; returns the trace
+        object (callers report event counts)."""
+        return write_chrome_trace(path, self.tracer.snapshot())

@@ -124,3 +124,23 @@ def test_tracked_bench_report_covers_planner_layer():
     for route in ("qt1", "qt2", "qt34", "qt5", "scalar"):
         assert route in routes, (route, routes)
     assert "executables" in rep["plans"] and "shared_batches" in rep["plans"]
+
+
+def test_tracked_bench_report_covers_phase_observability():
+    """The §15 phase rows must stay in BENCH_serve.json: one
+    `serve/phase.*` row per request phase (value = p50 µs, p95 in the
+    derived column), the per-request phase-sum-vs-e2e tiling check
+    inside the 10% acceptance bound, deadline miss-phase attribution,
+    and the planner's est-vs-measured calibration table."""
+    payload = json.loads((REPO / "BENCH_serve.json").read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    for ph in ("queue", "plan", "pack", "compress", "execute", "decode"):
+        row = rows[f"serve/phase.{ph}"]
+        assert "p95_us=" in row["derived"] and "count=" in row["derived"], row
+    rep = payload["reports"]["serve"]
+    assert rep["phases"]["per_request_sum_vs_e2e_max_rel_err"] < 0.10
+    for ph in ("queue", "plan", "pack", "execute", "decode"):
+        assert rep["phases"][ph]["p95_us"] >= rep["phases"][ph]["p50_us"] >= 0.0
+    assert "serve/deadline_miss_phase" in rows
+    assert "miss_blame" in rep["deadline"]
+    assert rep["plans"]["est_vs_measured"], "measured-cost table is empty"

@@ -279,4 +279,9 @@ def test_deadline_and_queue_wait_reporting(world):
     assert unset.response.deadline_met is None
     assert all(t.response.queue_wait_s >= 0.0
                for t in (generous, hopeless, unset))
-    assert svc.stats["deadlines"] == {"met": 1, "missed": 1, "unset": 1}
+    assert svc.stats["deadlines"] == {
+        "met": 1, "missed": 1, "unset": 1,
+        # §15 phase attribution: a -1s budget is blown before the batch
+        # even starts, so the miss is blamed on the queue
+        "miss_blame": {"queue": 1},
+    }
