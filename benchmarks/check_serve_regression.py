@@ -1,0 +1,85 @@
+"""Bench-regression guard for the QT3-QT5 warm serve path (DESIGN.md §16).
+
+Compares a freshly measured BENCH json against the committed
+``BENCH_serve.json`` on the warm per-query medians of the guarded
+routes (``serve/drain_qt{3,4,5}_warm_*`` rows) and fails when any fresh
+number exceeds ``committed * tolerance``.
+
+The default tolerance is deliberately loose (2.5x): the committed
+numbers come from a different host than the CI runner, so the guard is
+calibrated to catch *step-gap* regressions — e.g. the fused window join
+silently falling back to the ~30x-slower per-key argsort path — not
+single-digit-percent noise. Both files must carry the same ``mode``
+(quick vs smoke vs full); on a mode mismatch the guard skips rather
+than compare different corpus scales.
+
+Usage:
+    python benchmarks/check_serve_regression.py \
+        --fresh BENCH_fresh.json --committed BENCH_serve.json [--tolerance 2.5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GUARDED_ROUTES = ("qt3", "qt4", "qt5")
+DEFAULT_TOLERANCE = 2.5
+
+
+def warm_per_query_us(payload: dict, route: str) -> float | None:
+    """The per_query_us of the plain-engine warm drain row for a route."""
+    prefix = f"serve/drain_{route}_warm_"
+    for row in payload["rows"]:
+        if row["name"].startswith(prefix):
+            for part in row["derived"].split(";"):
+                if part.startswith("per_query_us="):
+                    return float(part.split("=", 1)[1])
+    return None
+
+
+def check(fresh: dict, committed: dict, tolerance: float) -> list[str]:
+    if fresh.get("mode") != committed.get("mode"):
+        print(f"benchmark modes differ (fresh={fresh.get('mode')!r}, "
+              f"committed={committed.get('mode')!r}); guard skipped")
+        return []
+    failures = []
+    for route in GUARDED_ROUTES:
+        f = warm_per_query_us(fresh, route)
+        c = warm_per_query_us(committed, route)
+        if f is None or c is None:
+            failures.append(f"{route}: warm drain row missing "
+                            f"(fresh={f}, committed={c})")
+            continue
+        ratio = f / c
+        ok = ratio <= tolerance
+        print(f"{route}: warm per_query_us fresh={f:.1f} committed={c:.1f} "
+              f"ratio={ratio:.2f} tolerance={tolerance:.2f} "
+              f"[{'OK' if ok else 'REGRESSION'}]")
+        if not ok:
+            failures.append(f"{route}: {f:.1f}us > {tolerance:.2f}x "
+                            f"committed {c:.1f}us")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="freshly measured BENCH json")
+    ap.add_argument("--committed", required=True, help="committed BENCH_serve.json")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    args = ap.parse_args(argv)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.committed) as fh:
+        committed = json.load(fh)
+    failures = check(fresh, committed, args.tolerance)
+    if failures:
+        print("serve bench regression:", *failures, sep="\n  ")
+        return 1
+    print("serve bench regression guard OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -61,7 +61,7 @@ def main() -> None:
     if want("kernel"):
         from benchmarks import kernel_bench
 
-        rows += kernel_bench.run()
+        rows += kernel_bench.run(smoke=args.smoke)
 
     if want("serve"):
         from benchmarks import serve_bench

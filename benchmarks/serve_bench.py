@@ -5,8 +5,11 @@ packing, engine drains uncompressed vs warm-cache vs compressed
 (re-encode-per-drain vs per-key compressed-row cache), per-type
 cold/warm drains for every dispatch route, five-type mixed drains
 through the query-type dispatch, the per-route plan statistics of the
-planner layer (DESIGN.md §14), the per-phase latency breakdown of the
-mixed stream (``serve/phase.*`` rows from the §15 metrics registry,
+planner layer (DESIGN.md §14), the cost-driven payload arbitration
+report per typed route (``serve/payload_choice_*`` rows + the
+``payload_choice`` report: measured arms, the chosen payload and the
+warm ratio vs the raw engine, DESIGN.md §16), the per-phase latency
+breakdown of the mixed stream (``serve/phase.*`` rows from the §15 metrics registry,
 with the phase-sum-vs-e2e tiling check), and the deadline_met_rate of a
 50 ms-budget drain through ``SearchService.submit(deadline_s=...)``
 with per-miss phase blame (``serve/deadline_miss_phase``).
@@ -208,14 +211,30 @@ def run(smoke: bool = False):
         "qt5": sample_typed_queries(table, lex, n_q, "qt5", window=3, seed=7),
     }
     rep["drain_typed"] = {}
+    rep["payload_choice"] = {}
     for tname, tqs in typed.items():
         tqs = (tqs * ((eng_B // max(len(tqs), 1)) + 1))[:eng_B] if tqs else tqs
         if not tqs:
             continue
+        tcosts = None
         for cname, eng in (("", mk()), ("_compressed", mk(compressed=True))):
             for q in tqs:  # jit + cache warmup
                 eng.submit(q)
             eng.drain()
+            if cname == "_compressed":
+                # Converge the §16 payload arbitration before measuring:
+                # four unmeasured drains sample each arm once cache-warm
+                # and once cache-cold (explore compressed x2, raw probe
+                # x2), so the measured rounds below run on the argmin
+                # choice rather than mid-exploration.
+                for i in range(4):
+                    if i % 2:
+                        for c in (eng.pack_cache, eng.compressed_cache):
+                            if c is not None:
+                                c.clear()
+                    for q in tqs:
+                        eng.submit(q)
+                    eng.drain()
             lats = {"cold": 0.0, "warm": 0.0}
             for _ in range(rounds):  # cold = jit-warm, cache-cold
                 for c in (eng.pack_cache, eng.compressed_cache):
@@ -234,6 +253,42 @@ def run(smoke: bool = False):
                     f"serve/drain_{tname}{cname}_{phase}_B{len(tqs)}_L{eng_L}",
                     us, f"per_query_us={us / len(tqs):.1f}",
                 ))
+            if cname == "_compressed":
+                tcosts = eng.stats_snapshot()["plans"].get("payload_costs", {})
+        # -- payload arbitration report (DESIGN.md §16): the compressed
+        # engine's measured arms + choice, and its warm drain relative to
+        # the raw engine's (acceptance: the cost-driven engine is never
+        # >5% slower warm than the single-payload alternative)
+        raw_lat = rep["drain_typed"].get(tname)
+        arb_lat = rep["drain_typed"].get(f"{tname}_compressed")
+        if raw_lat and arb_lat:
+            ratio = arb_lat["warm"] / max(raw_lat["warm"], 1e-9)
+            # acceptance: per measured route the chosen arm's EWMA is
+            # within 5% of the alternative's (argmin guarantees <= 1.0
+            # once converged; >1.05 means the model is serving a loser)
+            arb_ok = all(
+                v[v["chosen"]]["ewma_us_per_query"] <= 1.05 * v[
+                    "raw" if v["chosen"] != "raw" else "compressed"
+                ]["ewma_us_per_query"]
+                for v in (tcosts or {}).values() if "chosen" in v
+            )
+            rep["payload_choice"][tname] = {
+                "warm_raw_engine_us": raw_lat["warm"],
+                "warm_compressed_engine_us": arb_lat["warm"],
+                "warm_ratio_vs_raw_engine": ratio,
+                "chosen_within_5pct_of_alt": arb_ok,
+                "costs": tcosts,
+            }
+            chosen = ";".join(
+                f"{route}={v['chosen']}" for route, v in sorted((tcosts or {}).items())
+                if "chosen" in v
+            )
+            rows.append((
+                f"serve/payload_choice_{tname}", arb_lat["warm"] / len(tqs),
+                f"warm_ratio_vs_raw_engine={ratio:.3f};"
+                f"chosen_within_5pct_of_alt={int(arb_ok)};"
+                + (chosen or "chosen=exploring"),
+            ))
 
     mixed = sample_mixed_queries(table, lex, eng_B, window=3, seed=8)
     mvariants = (

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.index_builder import ProximityIndex
 from repro.core.query import qt2_plan, qt34_plan, qt5_plan, select_fst_keys
 from repro.kernels.common import SENTINEL
+from repro.kernels.nearest_r import window_join
 
 from repro.kernels.common import shard_map_compat as _shard_map
 
@@ -177,7 +178,8 @@ def _nearest_r_multi(b_rows, centers, max_sep: int, r, r_max: int):
     return jax.vmap(one)(b_rows, centers, r)
 
 
-def qt34_join(a_g, ns_g, ns_r, max_sep: int, r_max: int):
+def qt34_join(a_g, ns_g, ns_r, max_sep: int, r_max: int,
+              use_pallas: bool = False):
     """Ordinary-window join (QT3/QT4, DESIGN.md §13): the anchor lemma's
     ordinary posting row against the other lemmas' ordinary rows — for
     each anchor posting, every other row must hold r distinct positions
@@ -187,38 +189,30 @@ def qt34_join(a_g, ns_g, ns_r, max_sep: int, r_max: int):
     and exactly the non-stop half of the QT5 join, which reuses it.
     Keys with r == 0 are padding and do not constrain. a_g: (B, L);
     ns_g: (B, Kn, L); ns_r: (B, Kn). Returns (valid, lo, hi) aligned
-    with the anchor row."""
-    valid = a_g != SENTINEL
-    lo = a_g
-    hi = a_g
-    for k in range(ns_g.shape[1]):
-        r = ns_r[:, k]
-        m, mn, mx = _nearest_r_multi(ns_g[:, k], a_g, max_sep, r, r_max)
-        active = (r > 0)[:, None]
-        valid &= m | ~active
-        upd = active & m
-        lo = jnp.where(upd, jnp.minimum(lo, mn), lo)
-        hi = jnp.where(upd, jnp.maximum(hi, mx), hi)
-    return valid, lo, hi
+    with the anchor row.
+
+    Delegates to ``kernels.nearest_r.window_join`` (DESIGN.md §16): the
+    sort-free counting join over all keys at once by default, the
+    Pallas fused kernel with ``use_pallas=True``. Both are bit-identical
+    to the historical per-key argsort loop over ``_nearest_r_multi``
+    (kept above as the documented device twin and test oracle)."""
+    return window_join(a_g, ns_g, ns_r, max_sep=max_sep, r_max=r_max,
+                       use_pallas=use_pallas)
 
 
-def qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, max_sep: int, r_max: int):
+def qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, max_sep: int, r_max: int,
+             use_pallas: bool = False):
     """Join the QT5 anchor (rarest non-stop lemma) posting row against
     the other non-stop rows (the ordinary-window join of
     :func:`qt34_join`) and the per-(anchor, stop-lemma) NSW aggregate
     rows (neighbor count >= r plus nearest-offset fragment extension —
     no stop-lemma posting list is ever materialized, the paper's point).
     Keys with r == 0 are padding. a_g: (B, L); ns_g: (B, Kn, L);
-    st_cnt/st_ext: (B, Ks, L) aligned with the anchor row."""
-    valid, lo, hi = qt34_join(a_g, ns_g, ns_r, max_sep, r_max)
-    for k in range(st_cnt.shape[1]):
-        r = st_r[:, k][:, None]
-        active = r > 0
-        valid &= (st_cnt[:, k] >= r) | ~active
-        ext = jnp.where(active, st_ext[:, k], 0)
-        lo = jnp.minimum(lo, a_g + jnp.minimum(ext, 0))
-        hi = jnp.maximum(hi, a_g + jnp.maximum(ext, 0))
-    return valid, lo, hi
+    st_cnt/st_ext: (B, Ks, L) aligned with the anchor row. The stop
+    constraints fold into the same fused ``window_join`` pass (Pallas:
+    into the same kernel), preserving the qt34/qt5 step sharing."""
+    return window_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r,
+                       max_sep=max_sep, r_max=r_max, use_pallas=use_pallas)
 
 
 # --------------------------------------------------------------------------
@@ -323,7 +317,8 @@ def make_qt1_serve_step_compressed(mesh, top_k: int = 16, delta_g: bool = True):
 
 
 def make_wv_serve_step(mesh, qtype: str, top_k: int = 16, payload: str = "raw",
-                       max_distance: int = 5, r_max: int = 4):
+                       max_distance: int = 5, r_max: int = 4,
+                       use_pallas: bool = False):
     """Build the jitted, mesh-sharded QT2/QT3/QT4/QT5 serve step — the
     (w,v)-key / ordinary-window / NSW analogue of
     :func:`make_qt1_serve_step` (DESIGN.md §12-§13). One factory covers
@@ -342,7 +337,10 @@ def make_wv_serve_step(mesh, qtype: str, top_k: int = 16, payload: str = "raw",
       exists so the engine's per-format step naming stays uniform).
 
     The joins are payload-independent: compressed payloads are
-    reconstructed elementwise and fuse into them."""
+    reconstructed elementwise and fuse into them. ``use_pallas``
+    (qt34/qt5 only) routes the window join through the fused Pallas
+    nearest-r kernel — a TPU escape hatch; the default lax counting
+    join is the fast path on CPU hosts (DESIGN.md §16)."""
     assert qtype in ("qt2", "qt34", "qt5")
     assert payload in ("raw", "delta", "offsets")
     has_pod = "pod" in mesh.axis_names
@@ -394,7 +392,8 @@ def make_wv_serve_step(mesh, qtype: str, top_k: int = 16, payload: str = "raw",
         sep = max_distance
 
         def join_finish(a_g, ns_g, ns_r, idf_sum, span_adjust):
-            valid, lo, hi = qt34_join(a_g, ns_g, ns_r, sep, r_max)
+            valid, lo, hi = qt34_join(a_g, ns_g, ns_r, sep, r_max,
+                                      use_pallas=use_pallas)
             score = qt1_score(valid, lo, hi, idf_sum, span_adjust)
             return finish(score, lo, lo, hi)
 
@@ -415,7 +414,8 @@ def make_wv_serve_step(mesh, qtype: str, top_k: int = 16, payload: str = "raw",
         sep = max_distance
 
         def join_finish(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, idf_sum, span_adjust):
-            valid, lo, hi = qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, sep, r_max)
+            valid, lo, hi = qt5_join(a_g, ns_g, ns_r, st_cnt, st_ext, st_r, sep,
+                                     r_max, use_pallas=use_pallas)
             score = qt1_score(valid, lo, hi, idf_sum, span_adjust)
             return finish(score, lo, lo, hi)
 

@@ -164,8 +164,9 @@ def qt5_plan(index, lemma_ids: list[int]):
     the compiled and scalar paths cannot drift. Returns (anchor, others,
     stops, counts): anchor = the rarest non-stop lemma (tie-break by
     id); others = [(lemma, multiplicity), ...] ordinary-window
-    constraints, anchor first when its multiplicity > 1, then the
-    remaining non-stop lemmas ascending; stops = [(stop lemma,
+    constraints — the anchor itself included when its multiplicity > 1 —
+    ordered sparsest-first by live posting count (tie-break by id, the
+    early-mask join order of DESIGN.md §16); stops = [(stop lemma,
     multiplicity), ...] NSW constraints sorted by id; counts = live
     posting counts of the non-stop lemmas. None for degenerate queries
     (no stop or no non-stop lemma)."""
@@ -180,12 +181,13 @@ def qt5_plan(index, lemma_ids: list[int]):
     mult_ns: dict[int, int] = {}
     for l in nonstop:
         mult_ns[l] = mult_ns.get(l, 0) + 1
-    others = []
-    if mult_ns[anchor] > 1:
-        others.append((anchor, mult_ns[anchor]))
-    for l in sorted(set(nonstop)):
-        if l != anchor:
-            others.append((l, mult_ns[l]))
+    # Sparsest-first join order (arXiv 2009.02684): rarer constraint rows
+    # invalidate more anchor lanes earlier, so the fused join's early-mask
+    # skips work for the denser keys. The join's AND/min/max accumulation
+    # is order-independent, so CPU/device results are unchanged.
+    cons = [l for l in mult_ns if l != anchor or mult_ns[l] > 1]
+    others = [(l, mult_ns[l])
+              for l in sorted(cons, key=lambda l: (counts[l], l))]
     mult_st: dict[int, int] = {}
     for l in stop:
         mult_st[l] = mult_st.get(l, 0) + 1
@@ -200,8 +202,9 @@ def qt34_plan(index, lemma_ids: list[int]):
     precedent). Returns (anchor, others, counts): anchor = the most
     frequent lemma (smallest FL-number, the uniform anchor rule of
     DESIGN.md §9); others = [(lemma, multiplicity), ...] window
-    constraints — the anchor itself first when its multiplicity > 1,
-    then the remaining lemmas ascending by FL; counts = live ordinary
+    constraints — the anchor itself included when its multiplicity > 1 —
+    ordered sparsest-first by live posting count (tie-break by FL, the
+    early-mask join order of DESIGN.md §16); counts = live ordinary
     posting counts per distinct lemma (what the serving router sizes the
     L-bucket by)."""
     ids = list(lemma_ids)
@@ -210,12 +213,11 @@ def qt34_plan(index, lemma_ids: list[int]):
         mult[l] = mult.get(l, 0) + 1
     uniq = sorted(mult)
     anchor = uniq[0]
-    others = []
-    if mult[anchor] > 1:
-        others.append((anchor, mult[anchor]))
-    for l in uniq[1:]:
-        others.append((l, mult[l]))
     counts = {l: index.ordinary.n_postings(l) for l in uniq}
+    # Sparsest-first join order — see qt5_plan; results are unchanged
+    # because the join accumulation is order-independent.
+    cons = [l for l in uniq if l != anchor or mult[l] > 1]
+    others = [(l, mult[l]) for l in sorted(cons, key=lambda l: (counts[l], l))]
     return anchor, others, counts
 
 

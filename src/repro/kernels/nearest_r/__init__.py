@@ -1,0 +1,3 @@
+"""Batched r-nearest window-membership join (QT3/QT4/QT5 hot loop)."""
+
+from repro.kernels.nearest_r.ops import window_join, plan_k_tiles  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for the fused ordinary-window + NSW join.
+
+``window_join_ref`` is the pre-kernel serve path verbatim: one
+argsort-based r-nearest membership pass per non-stop key (the device
+twin of ``search._nearest_r``), folded with the elementwise stop-row
+constraints of ``qt5_join``. It is the lax *baseline* the nearest-r
+kernel rows in ``benchmarks/kernel_bench.py`` compare against, and the
+tie-breaking oracle the property tests pin the kernel to: candidate
+columns in CPU order [idx-1, idx, idx-2, idx+1, ...], stable sort, so
+ties at equal distance resolve pred_p before succ_q iff p <= q.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import SENTINEL
+
+BIG_DIST = jnp.int32(2**30)
+
+
+def nearest_r_ref(b_rows, centers, max_sep: int, r, r_max: int):
+    """Batched r-nearest membership, argsort formulation: for each
+    center, whether sorted row b holds r distinct values within
+    ``max_sep``, plus the min/max of the r nearest (center included —
+    the join folds via min/max against bounds that already bracket the
+    center, so this equals the CPU contract wherever it is consumed).
+    b_rows/centers: (N, L); r: (N,) traced multiplicity."""
+    Lb = b_rows.shape[-1]
+    jcol = np.arange(2 * r_max) // 2  # candidate ring index per column
+
+    def one(b_row, c_row, r1):
+        idx = jnp.searchsorted(b_row, c_row)
+        cols = []
+        for j in range(1, r_max + 1):
+            cols.append(idx - j)
+            cols.append(idx + (j - 1))
+        ci = jnp.stack(cols, axis=1)
+        ok = (ci >= 0) & (ci < Lb)
+        cand = jnp.where(ok, b_row[jnp.clip(ci, 0, Lb - 1)], 0)
+        ok &= cand != SENTINEL
+        dist = jnp.abs(cand - c_row[:, None])
+        ok &= dist <= max_sep
+        ok &= jnp.asarray(jcol)[None, :] < r1
+        dist = jnp.where(ok, dist, BIG_DIST)
+        order = jnp.argsort(dist, axis=1)
+        d_sorted = jnp.take_along_axis(dist, order, axis=1)
+        c_sorted = jnp.take_along_axis(cand, order, axis=1)
+        r_col = jnp.clip(r1 - 1, 0, 2 * r_max - 1)
+        matched = jnp.take(d_sorted, r_col, axis=1) <= max_sep
+        keep = (jnp.arange(2 * r_max)[None, :] < r1) & (d_sorted <= max_sep)
+        chosen = jnp.where(keep, c_sorted, c_row[:, None])
+        return matched, chosen.min(axis=1), chosen.max(axis=1)
+
+    return jax.vmap(one)(b_rows, centers, r)
+
+
+def window_join_ref(a_g, ns_g, ns_r, st_cnt=None, st_ext=None, st_r=None, *,
+                    max_sep: int, r_max: int):
+    """Fused-join oracle: per-key argsort r-nearest loop + stop fold.
+
+    a_g: (B, L) sorted anchor rows; ns_g: (B, Kn, L) sorted non-stop
+    rows; ns_r: (B, Kn) multiplicities (0 = padding key). Optional
+    st_cnt/st_ext: (B, Ks, L) NSW aggregates aligned with the anchor,
+    st_r: (B, Ks). Returns (valid, lo, hi) aligned with the anchor."""
+    valid = a_g != SENTINEL
+    lo = a_g
+    hi = a_g
+    for k in range(ns_g.shape[1]):
+        r = ns_r[:, k]
+        m, mn, mx = nearest_r_ref(ns_g[:, k], a_g, max_sep, r, r_max)
+        active = (r > 0)[:, None]
+        valid &= m | ~active
+        upd = active & m
+        lo = jnp.where(upd, jnp.minimum(lo, mn), lo)
+        hi = jnp.where(upd, jnp.maximum(hi, mx), hi)
+    if st_cnt is not None:
+        for k in range(st_cnt.shape[1]):
+            r = st_r[:, k][:, None]
+            active = r > 0
+            valid &= (st_cnt[:, k] >= r) | ~active
+            ext = jnp.where(active, st_ext[:, k], 0)
+            lo = jnp.minimum(lo, a_g + jnp.minimum(ext, 0))
+            hi = jnp.maximum(hi, a_g + jnp.maximum(ext, 0))
+    return valid, lo, hi

@@ -1,0 +1,147 @@
+"""Cost-driven payload arbitration for the planner (DESIGN.md §16).
+
+The static payload rule ("compressed engine => delta16 when the bucket
+is block-aligned, else offsets") encodes a bytes-per-posting argument,
+but what the response-time guarantee cares about is *measured* warm
+batch time — and PR 6's calibration showed the compressed payload
+winning on some routes (QT4) while losing on others (QT3) at the same
+bucket. :class:`PayloadCostModel` closes that loop: per (step_family,
+L-bucket) it keeps a warm per-query EWMA for each payload *arm* —
+``raw`` vs the static rule's compressed format — explores both briefly,
+then routes the group to the measured argmin, re-probing the losing arm
+every ``probe_every`` winner observations so a probe window that landed
+on cache-cold drains cannot pin a stale verdict.
+
+Integration contract:
+
+* ``choose(family, bucket, static_payload)`` is consulted by
+  ``planner._payload`` only when the engine is compressed (raw engines
+  have a single candidate). Exploration order is compressed-arm first:
+  short-lived services behave exactly like the static rule (the
+  existing compressed-serving tests pin that), and only sustained
+  traffic pays the one-off raw probe.
+* ``observe(family, bucket, payload, us_per_query)`` is fed by the
+  executor from *warm* batches only (first-call compiles are excluded,
+  as in the ``serve.step.*`` histograms), with the whole warm batch
+  wall-clock — pack/compress/decode included — divided by the padded
+  batch size, so host-side encode costs count against the arm that
+  incurs them.
+* ``generation`` increments whenever the *effective* choice for some
+  (family, bucket) changes — exploration-phase transitions (compressed
+  arm sampled -> raw probe window -> measured argmin) as well as later
+  EWMA flips; the service keys its plan memo on it, so memoized plans
+  can never pin a stale payload or starve the raw probe.
+
+The model is intentionally tiny (dict + EWMA, no locking beyond the
+GIL): it arbitrates between two arms whose measured gap on the routes
+that matter is tens of percent, far beyond EWMA noise.
+"""
+
+from __future__ import annotations
+
+from repro.serving.planner import PAYLOAD_RAW
+
+# observations of an arm before the other arm is explored / the argmin
+# is trusted; EWMA weight of the newest observation; winner observations
+# between re-probes of the losing arm
+MIN_SAMPLES = 2
+ALPHA = 0.4
+PROBE_EVERY = 16
+
+
+def _arm(payload: str) -> str:
+    """delta16 and offsets are one arm: which of them serves is the
+    packer's uint16-overflow verdict, not a planner choice."""
+    return PAYLOAD_RAW if payload == PAYLOAD_RAW else "compressed"
+
+
+class PayloadCostModel:
+    """Measured per-(step_family, L-bucket) payload arbitration."""
+
+    def __init__(self, min_samples: int = MIN_SAMPLES, alpha: float = ALPHA,
+                 probe_every: int = PROBE_EVERY):
+        self.min_samples = min_samples
+        self.alpha = alpha
+        self.probe_every = probe_every
+        self._stale: dict[tuple, int] = {}  # winner obs since loser sampled
+        self._ewma: dict[tuple, float] = {}  # (family, bucket, arm) -> us
+        self._count: dict[tuple, int] = {}
+        self._chosen: dict[tuple, str] = {}  # (family, bucket) -> arm
+        self._phases: dict[tuple, str] = {}  # (family, bucket) -> phase
+        self.generation = 0
+
+    def observe(self, family: str, bucket: int, payload: str,
+                us_per_query: float) -> None:
+        key = (family, bucket, _arm(payload))
+        prev = self._ewma.get(key)
+        self._ewma[key] = (us_per_query if prev is None
+                           else prev + self.alpha * (us_per_query - prev))
+        self._count[key] = self._count.get(key, 0) + 1
+        gk = (family, bucket)
+        winner = self._argmin(family, bucket)
+        if winner is not None:
+            self._stale[gk] = (self._stale.get(gk, 0) + 1
+                               if _arm(payload) == winner else 0)
+        now = self._phase(family, bucket)
+        if self._phases.get(gk, "explore_compressed") != now:
+            self._phases[gk] = now
+            if now in ("compressed", PAYLOAD_RAW):
+                self._chosen[gk] = now
+            self.generation += 1
+
+    def _phase(self, family: str, bucket: int) -> str:
+        """The exploration state machine: sample the static compressed
+        format first, then a raw probe window, then the measured argmin
+        — re-probing the losing arm after every ``probe_every`` winner
+        observations. Any transition is a change in what :meth:`choose`
+        returns, so :meth:`observe` bumps ``generation`` on it — without
+        that, a service's memoized plans would pin the compressed
+        payload and the raw arm would never be sampled. The periodic
+        re-probe matters for the same reason the probe itself does: a
+        probe window that happened to land on cache-cold drains writes
+        an inflated EWMA for the losing arm, and with one-shot probing
+        that stale verdict would never be revisited (the winner keeps
+        refreshing its EWMA, the loser never does)."""
+        if self._count.get((family, bucket, "compressed"), 0) < self.min_samples:
+            return "explore_compressed"
+        if self._count.get((family, bucket, PAYLOAD_RAW), 0) < self.min_samples:
+            return "explore_raw"
+        winner = self._argmin(family, bucket)
+        if self._stale.get((family, bucket), 0) >= self.probe_every:
+            return ("probe_raw" if winner == "compressed"
+                    else "probe_compressed")
+        return winner
+
+    def _argmin(self, family: str, bucket: int) -> str | None:
+        """The measured-best arm, or None while either arm is still
+        unexplored (choices must not flap on one-sided evidence)."""
+        arms = []
+        for arm in ("compressed", PAYLOAD_RAW):
+            key = (family, bucket, arm)
+            if self._count.get(key, 0) < self.min_samples:
+                return None
+            arms.append((self._ewma[key], arm))
+        return min(arms)[1]
+
+    def choose(self, family: str, bucket: int, static_payload: str) -> str:
+        """The payload one compiled group should serve: the static
+        compressed format while that arm explores, one raw probe window
+        next, then the measured argmin."""
+        phase = self._phase(family, bucket)
+        if phase in ("explore_compressed", "probe_compressed", "compressed"):
+            return static_payload
+        return PAYLOAD_RAW  # explore_raw / probe_raw / raw
+
+    def table(self) -> dict:
+        """Plain-data snapshot for stats/bench reporting: per
+        (family, bucket), each arm's EWMA + count and the current
+        choice."""
+        out: dict = {}
+        for (family, bucket, arm), us in sorted(self._ewma.items()):
+            entry = out.setdefault(f"{family}/L{bucket}", {})
+            entry[arm] = {"ewma_us_per_query": us,
+                          "n": self._count[(family, bucket, arm)]}
+            chosen = self._chosen.get((family, bucket))
+            if chosen is not None:
+                entry["chosen"] = chosen
+        return out

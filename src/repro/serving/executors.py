@@ -156,11 +156,15 @@ class CompiledExecutor:
 
     def __init__(self, mesh, config, pack_cache=None, compressed_cache=None,
                  metrics: MetricsRegistry | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None, costs=None):
         self.mesh = mesh
         self.config = config
         self.pack_cache = pack_cache
         self.compressed_cache = compressed_cache
+        # optional PayloadCostModel (owned by the service): warm batch
+        # times stream into it per (family, bucket, payload arm), and
+        # the planner consults it for the group's payload choice
+        self.costs = costs
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         # compiled steps, one per (step family, payload format); jit
@@ -204,6 +208,7 @@ class CompiledExecutor:
                 step = make_wv_serve_step(
                     self.mesh, qtype, top_k=cfg.top_k, payload=payload,
                     max_distance=max_distance, r_max=cfg.r_max,
+                    use_pallas=cfg.use_pallas,
                 )
             self._steps[kind] = step
         return step
@@ -225,13 +230,16 @@ class CompiledExecutor:
                 compress_qt5_batch, "qt5_", {"Kn": cfg.k_ns, "Ks": cfg.k_st})
 
     def execute(self, index, queries, selections, *, step_family, bucket,
-                shared=None):
+                shared=None, payload=None):
         """Serve one (step family, L-bucket) group: chunked to
         ``config.max_batch``, each chunk padded to the power-of-two
         batch ladder and executed on the (kind, B, L) executable.
         ``shared`` (aligned with ``queries``) flags requests riding a
         foreign step family — qt34 plans converted to zero-stop qt5
-        plans by the caller; a batch containing any counts as shared."""
+        plans by the caller; a batch containing any counts as shared.
+        ``payload`` is the group's planner-chosen format: ``raw`` on a
+        compressed engine forces the raw pack path (the cost model's
+        raw arm); None keeps the config-static behavior."""
         cfg = self.config
         out: list[ExecResult] = []
         for lo in range(0, len(queries), cfg.max_batch):
@@ -245,6 +253,7 @@ class CompiledExecutor:
                 kind, stub, args, t_pack, t_comp = self._prepare(
                     index, step_family, bucket,
                     chunk_q + [[]] * pad, chunk_s + [None] * pad, t0,
+                    payload=payload,
                 )
                 key = (kind, B_pad, bucket)
                 fn, first = self._executable_for(key, kind,
@@ -280,6 +289,15 @@ class CompiledExecutor:
                     (t_exec - t_compile) * 1e6,
                 )
                 self.measured_keys.add((step_family, B_pad, bucket))
+                if self.costs is not None:
+                    # payload arbitration sees the whole warm batch cost
+                    # (pack/compress/decode included — host encode work
+                    # counts against the arm that incurs it), per padded
+                    # query; compile is excluded like the step metric
+                    warm_s = (t1 - t0) - phases["compile"]
+                    self.costs.observe(step_family, bucket,
+                                       _payload_of_kind(kind),
+                                       warm_s * 1e6 / B_pad)
             payload = _payload_of_kind(kind)
             out.extend(
                 ExecResult(results=decoded[bi], latency_s=t1 - t0,
@@ -383,14 +401,20 @@ class CompiledExecutor:
         return out
 
     # -- batch preparation --------------------------------------------------
-    def _prepare(self, index, family, bucket, queries, selections, t0):
+    def _prepare(self, index, family, bucket, queries, selections, t0,
+                 payload=None):
         """Pack (and compress) one padded batch; returns
         ``(kind, decode stub, device args, t_pack_end, t_compress_end)``
-        so the caller can tile the phase timeline without gaps."""
+        so the caller can tile the phase timeline without gaps.
+        ``payload=PAYLOAD_RAW`` forces the raw pack path even on a
+        compressed engine — the cost model's raw arm; the raw and
+        compressed steps of a family are bit-identical in results, so
+        the choice only moves time."""
         assemble_fn, pack_fn, compress_fn, prefix, kw = self._family_fns(family)
         cfg = self.config
         ccache = self.compressed_cache
-        if cfg.compressed and ccache is not None:
+        serve_compressed = cfg.compressed and payload != PAYLOAD_RAW
+        if serve_compressed and ccache is not None:
             # the per-key compressed-row cache derives raw + compressed
             # rows in one pass, so pack and compress are one phase here
             # (attributed to pack; compress reads 0)
@@ -403,7 +427,7 @@ class CompiledExecutor:
             self._count_compressed(kind)
             t_pack = time.perf_counter()
             return kind, stub, args, t_pack, t_pack
-        if not cfg.compressed:
+        if not serve_compressed:
             kind = "base" if family == "qt1" else f"{family}_raw"
             with self.tracer.span("pack", family=family):
                 batch = pack_fn(

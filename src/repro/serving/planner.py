@@ -138,17 +138,27 @@ def delta16_aligned(bucket: int, config) -> bool:
     return bucket % (64 * config.doc_shards) == 0
 
 
-def _payload(bucket: int, config) -> str:
+def _payload(bucket: int, config, step_family: str | None = None,
+             costs=None) -> str:
     """Predicted device payload for one compiled group: raw when the
     engine is uncompressed; delta16 when the bucket is block-aligned
     (the headline 4 B/posting format); offsets otherwise. Per-key
     uint16 span overflow can still downgrade a delta16 prediction at
-    pack time."""
+    pack time.
+
+    With a :class:`repro.serving.costs.PayloadCostModel` (and the step
+    family it is keyed by), the static rule only names the compressed
+    *candidate* — the model arbitrates it against raw per
+    (step_family, bucket) from measured warm batch time (DESIGN.md
+    §16), so a route where compression loses (QT3's measured
+    regression) serves raw while QT4 keeps its compressed win."""
     if not config.compressed:
         return PAYLOAD_RAW
-    if delta16_aligned(bucket, config):
-        return PAYLOAD_DELTA16
-    return PAYLOAD_OFFSETS
+    static = (PAYLOAD_DELTA16 if delta16_aligned(bucket, config)
+              else PAYLOAD_OFFSETS)
+    if costs is not None and step_family is not None:
+        return costs.choose(step_family, bucket, static)
+    return static
 
 
 def _streams(step_family: str, config) -> int:
@@ -162,11 +172,12 @@ def _streams(step_family: str, config) -> int:
     return 1 + config.k_ns + config.k_st  # qt5: anchor + non-stop + NSW
 
 
-def _compiled(qtype, route, bucket, config, selection, step_family=None) -> QueryPlan:
+def _compiled(qtype, route, bucket, config, selection, step_family=None,
+              costs=None) -> QueryPlan:
     step_family = step_family or route
     return QueryPlan(
         qtype=qtype, route=route, step_family=step_family, bucket=bucket,
-        payload=_payload(bucket, config),
+        payload=_payload(bucket, config, step_family, costs),
         est_step_cost=_streams(step_family, config) * bucket * config.doc_shards,
         selection=selection,
     )
@@ -176,13 +187,17 @@ def _scalar(qtype, reason: str) -> QueryPlan:
     return QueryPlan(qtype=qtype, route=ROUTE_SCALAR, fallback_reason=reason)
 
 
-def plan(request, snapshot, config) -> QueryPlan:
+def plan(request, snapshot, config, costs=None) -> QueryPlan:
     """Pure routing: one request -> :class:`QueryPlan`, reproducing the
     DESIGN.md §13 dispatch matrix row by row (conditions checked in
     matrix order, so ``fallback_reason`` names the *first* failing
     one). ``request`` is a lemma-id list (or anything with a
     ``lemma_ids`` attribute); ``snapshot`` an immutable index view;
-    ``config`` a :class:`repro.serving.service.ServeConfig`."""
+    ``config`` a :class:`repro.serving.service.ServeConfig`; ``costs``
+    an optional :class:`repro.serving.costs.PayloadCostModel` — the
+    one measured input: given the same (request, snapshot, config) and
+    the same cost-model state (its ``generation`` is the service's
+    memo key), the decision is still deterministic."""
     ids = list(getattr(request, "lemma_ids", request))
     if not ids:
         return QueryPlan(qtype=None, route=ROUTE_EMPTY)
@@ -203,7 +218,7 @@ def plan(request, snapshot, config) -> QueryPlan:
         bucket = ladder_bucket(longest, config)
         if bucket is None:
             return _scalar(qtype, FB_ROW_EXCEEDS_LADDER)
-        return _compiled(qtype, ROUTE_QT1, bucket, config, keys)
+        return _compiled(qtype, ROUTE_QT1, bucket, config, keys, costs=costs)
 
     if qtype == QueryType.QT2:
         if snapshot.wv is None:
@@ -221,7 +236,8 @@ def plan(request, snapshot, config) -> QueryPlan:
         bucket = ladder_bucket(longest, config)
         if bucket is None:
             return _scalar(qtype, FB_ROW_EXCEEDS_LADDER)
-        return _compiled(qtype, ROUTE_QT2, bucket, config, ordered)
+        return _compiled(qtype, ROUTE_QT2, bucket, config, ordered,
+                         costs=costs)
 
     if qtype == QueryType.QT5:
         if snapshot.ordinary is None:
@@ -245,7 +261,7 @@ def plan(request, snapshot, config) -> QueryPlan:
         bucket = ladder_bucket(longest, config)
         if bucket is None:
             return _scalar(qtype, FB_ROW_EXCEEDS_LADDER)
-        return _compiled(qtype, ROUTE_QT5, bucket, config, p5)
+        return _compiled(qtype, ROUTE_QT5, bucket, config, p5, costs=costs)
 
     # QT3/QT4: ordinary-index window scans through the shared qt34_join
     # — computationally identical, so one route serves both
@@ -267,4 +283,5 @@ def plan(request, snapshot, config) -> QueryPlan:
     # executable ladder for both paths
     family = (ROUTE_QT5 if config.share_buckets and len(others) <= config.k_ns
               else ROUTE_QT34)
-    return _compiled(qtype, ROUTE_QT34, bucket, config, p34, step_family=family)
+    return _compiled(qtype, ROUTE_QT34, bucket, config, p34,
+                     step_family=family, costs=costs)

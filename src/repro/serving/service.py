@@ -36,6 +36,7 @@ from repro.serving.executors import (
     empty_results,
     zero_phases,
 )
+from repro.serving.costs import PayloadCostModel
 from repro.serving.pack_cache import PackedPostingCache
 from repro.serving.planner import QueryPlan
 
@@ -59,6 +60,14 @@ class ServeConfig:
       plans fit the QT5 step's non-stop slots ride the qt5 executable
       of the same (B, L), and are batched together with qt5 traffic
       (DESIGN.md §14);
+    * ``payload_cost_driven`` — arbitrate each compressed group's
+      payload (raw vs the static delta16/offsets rule) per
+      (step_family, L-bucket) from measured warm batch time
+      (DESIGN.md §16); no effect on an uncompressed engine;
+    * ``use_pallas`` — route the qt34/qt5 window join through the
+      fused Pallas nearest-r kernel (TPU; interpret-mode on CPU is for
+      validation only — the default lax counting join is the CPU fast
+      path, DESIGN.md §16);
     * ``default_deadline_s`` — deadline attached to submits that don't
       pass one (None = no deadline);
     * ``trace_enabled`` / ``trace_capacity`` — the §15 span tracer (a
@@ -82,6 +91,8 @@ class ServeConfig:
     k_ord: int = 4
     r_max: int = 4
     share_buckets: bool = True
+    payload_cost_driven: bool = True
+    use_pallas: bool = False
     default_deadline_s: float | None = None
     trace_enabled: bool = True
     trace_capacity: int = 8192
@@ -229,10 +240,17 @@ class SearchService:
             if cfg.compressed and cfg.use_compressed_cache
             else None
         )
+        # measured payload arbitration (DESIGN.md §16): only meaningful
+        # when two payload arms exist, i.e. on a compressed engine
+        self.payload_costs = (
+            PayloadCostModel()
+            if cfg.compressed and cfg.payload_cost_driven else None
+        )
         self.compiled = CompiledExecutor(
             mesh, cfg, pack_cache=self.pack_cache,
             compressed_cache=self.compressed_cache,
             metrics=self.metrics, tracer=self.tracer,
+            costs=self.payload_costs,
         )
         self.scalar = ScalarExecutor(cfg, metrics=self.metrics,
                                      tracer=self.tracer)
@@ -248,6 +266,7 @@ class SearchService:
         # n_postings scan per key)
         self._plan_memo: dict[tuple, QueryPlan] = {}
         self._plan_memo_view = None
+        self._plan_memo_gen = 0
         self._plan_memo_cap = 65536
         self.stats = {
             "batches": 0, "requests": 0, "refreshes": 0,
@@ -271,15 +290,22 @@ class SearchService:
 
     # -- planning ----------------------------------------------------------
     def _plan(self, index, lemma_ids) -> QueryPlan:
-        if index is not self._plan_memo_view:
+        # validity is (snapshot identity, cost-model generation): a
+        # payload-choice flip bumps the generation, so memoized plans
+        # can never pin a stale payload
+        gen = (self.payload_costs.generation
+               if self.payload_costs is not None else 0)
+        if index is not self._plan_memo_view or gen != self._plan_memo_gen:
             # the scalar executor tracks snapshot identity itself
             self._plan_memo = {}
             self._plan_memo_view = index
+            self._plan_memo_gen = gen
         memo_key = tuple(lemma_ids)
         p = self._plan_memo.get(memo_key)
         if p is not None:
             return p
-        p = _planner.plan(list(lemma_ids), index, self.config)
+        p = _planner.plan(list(lemma_ids), index, self.config,
+                          costs=self.payload_costs)
         if len(self._plan_memo) >= self._plan_memo_cap:
             self._plan_memo.clear()
         self._plan_memo[memo_key] = p
@@ -430,9 +456,12 @@ class SearchService:
                 else:
                     sels = [self._selection_for(plans[i], family) for i in idxs]
                     shared = [plans[i].route != family for i in idxs]
+                    # one payload per (family, bucket) group: all its
+                    # plans were routed under the same cost-model state
                     execs = self.compiled.execute(index, queries, sels,
                                                   step_family=family,
-                                                  bucket=bucket, shared=shared)
+                                                  bucket=bucket, shared=shared,
+                                                  payload=plans[idxs[0]].payload)
                     if bucket in self.stats["bucket_hist"]:
                         mb = self.config.max_batch
                         with self._stats_lock:
@@ -537,6 +566,8 @@ class SearchService:
             st["plans"]["executables"] = ex.n_executables
             st["plans"]["shared_batches"] = ex.stats["shared_batches"]
             st["plans"]["est_vs_measured"] = est_vs_measured
+            if self.payload_costs is not None:
+                st["plans"]["payload_costs"] = self.payload_costs.table()
             if pack_stats is not None:
                 st["pack_cache"] = pack_stats
             if comp_stats is not None:

@@ -144,3 +144,23 @@ def test_tracked_bench_report_covers_phase_observability():
     assert "serve/deadline_miss_phase" in rows
     assert "miss_blame" in rep["deadline"]
     assert rep["plans"]["est_vs_measured"], "measured-cost table is empty"
+
+
+def test_tracked_bench_report_covers_nearest_r_and_payload_choice():
+    """The §16 rows must stay in BENCH_serve.json: nearest-r kernel
+    rows (counting join vs argsort baseline + the Pallas interpret
+    spot-check, which must report bit-identity) and the per-route
+    cost-driven payload-choice report."""
+    payload = json.loads((REPO / "BENCH_serve.json").read_text())
+    names = {r["name"] for r in payload["rows"]}
+    for want in ("kernel/nearest_r_ref_", "kernel/nearest_r_count_",
+                 "kernel/nearest_r_pallas_interp_", "serve/payload_choice_qt3",
+                 "serve/payload_choice_qt4", "serve/payload_choice_qt5"):
+        assert any(n.startswith(want) for n in names), (want, sorted(names))
+    pallas = next(r for r in payload["rows"]
+                  if r["name"].startswith("kernel/nearest_r_pallas_interp_"))
+    assert "bit_identical_to_ref=1" in pallas["derived"], pallas
+    pc = payload["reports"]["serve"]["payload_choice"]
+    for route in ("qt3", "qt4", "qt5"):
+        assert pc[route]["warm_ratio_vs_raw_engine"] > 0.0, (route, pc)
+        assert pc[route]["chosen_within_5pct_of_alt"], (route, pc)
