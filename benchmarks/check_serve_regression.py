@@ -13,6 +13,13 @@ single-digit-percent noise. Both files must carry the same ``mode``
 (quick vs smoke vs full); on a mode mismatch the guard skips rather
 than compare different corpus scales.
 
+It additionally enforces the §17 response-time SLO as an *absolute*
+floor: any ``serve/deadline_met_rate_controlled@<rate>`` row
+(benchmarks/load_bench.py) in a quick-mode file must be >= 0.95 — met
+rates are host-independent because the offered rate scales with the
+measured capacity of the box, so this check runs even when the two
+files' modes differ.
+
 Usage:
     python benchmarks/check_serve_regression.py \
         --fresh BENCH_fresh.json --committed BENCH_serve.json [--tolerance 2.5]
@@ -26,6 +33,39 @@ import sys
 
 GUARDED_ROUTES = ("qt3", "qt4", "qt5")
 DEFAULT_TOLERANCE = 2.5
+# the §17 response-time SLO: every controlled open-loop met-rate row
+# (serve/deadline_met_rate_controlled@<rate>, benchmarks/load_bench.py)
+# must hold this floor in quick mode — unlike the warm-latency ratios
+# this is an *absolute* check (a met rate is host-independent: the
+# offered rate scales with the measured capacity of the box)
+CONTROLLED_ROW_PREFIX = "serve/deadline_met_rate_controlled@"
+MET_RATE_FLOOR = 0.95
+
+
+def controlled_met_rates(payload: dict) -> list[tuple[str, float]]:
+    """All controlled open-loop met-rate rows of a BENCH json."""
+    return [(row["name"], float(row["us_per_call"]))
+            for row in payload["rows"]
+            if row["name"].startswith(CONTROLLED_ROW_PREFIX)]
+
+
+def check_met_rate_slo(payload: dict, label: str) -> list[str]:
+    """Absolute SLO check on whichever file carries load-bench rows.
+
+    Skips silently when the payload has none (e.g. a fresh run with
+    ``--only serve``) or is not quick mode — smoke corpora are too small
+    for the met-rate to be meaningful as a hard floor."""
+    if payload.get("mode") != "quick":
+        return []
+    failures = []
+    for name, met in controlled_met_rates(payload):
+        ok = met >= MET_RATE_FLOOR
+        print(f"{label} {name}: met_rate={met:.3f} "
+              f"floor={MET_RATE_FLOOR:.2f} [{'OK' if ok else 'VIOLATION'}]")
+        if not ok:
+            failures.append(f"{label} {name}: controlled met rate "
+                            f"{met:.3f} < {MET_RATE_FLOOR:.2f}")
+    return failures
 
 
 def warm_per_query_us(payload: dict, route: str) -> float | None:
@@ -40,11 +80,14 @@ def warm_per_query_us(payload: dict, route: str) -> float | None:
 
 
 def check(fresh: dict, committed: dict, tolerance: float) -> list[str]:
+    # the absolute met-rate SLO does not need mode-matched files: it
+    # judges each file on its own
+    failures = (check_met_rate_slo(fresh, "fresh")
+                + check_met_rate_slo(committed, "committed"))
     if fresh.get("mode") != committed.get("mode"):
         print(f"benchmark modes differ (fresh={fresh.get('mode')!r}, "
               f"committed={committed.get('mode')!r}); guard skipped")
-        return []
-    failures = []
+        return failures
     for route in GUARDED_ROUTES:
         f = warm_per_query_us(fresh, route)
         c = warm_per_query_us(committed, route)

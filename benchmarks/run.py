@@ -6,8 +6,12 @@ Sections:
   equalize/*  — §2.3 heap vs basic Equalize scaling;
   kernel/*    — posting-intersection / proximity / embedding-bag ops;
   serve/*     — compiled QT1 serve-step latency per bucket, packed-posting
-                cache cold/warm packing, and engine drains
-                uncached/cached/compressed;
+                cache cold/warm packing, engine drains uncached/cached/
+                compressed, and closed-loop deadline met-rates;
+  load        — open-loop load (rows under serve/): controlled
+                (admission on, §17) vs uncontrolled deadline met-rates
+                at sustained/overload/bursty offered rates
+                (benchmarks/load_bench.py);
   churn/*     — segmented-index throughput + latency under add/delete/
                 merge churn (repro.index), incl. serve-cache hit rate.
 
@@ -69,6 +73,13 @@ def main() -> None:
         serve_rows, serve_rep = serve_bench.run(smoke=args.smoke)
         rows += serve_rows
         reports["serve"] = serve_rep
+
+    if want("load"):
+        from benchmarks import load_bench
+
+        load_rows, load_rep = load_bench.run(smoke=args.smoke)
+        rows += load_rows
+        reports["load"] = load_rep
 
     if want("churn"):
         from benchmarks import churn_bench

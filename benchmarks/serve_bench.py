@@ -10,9 +10,12 @@ report per typed route (``serve/payload_choice_*`` rows + the
 ``payload_choice`` report: measured arms, the chosen payload and the
 warm ratio vs the raw engine, DESIGN.md §16), the per-phase latency
 breakdown of the mixed stream (``serve/phase.*`` rows from the §15 metrics registry,
-with the phase-sum-vs-e2e tiling check), and the deadline_met_rate of a
-50 ms-budget drain through ``SearchService.submit(deadline_s=...)``
-with per-miss phase blame (``serve/deadline_miss_phase``).
+with the phase-sum-vs-e2e tiling check), and the deadline met-rate
+curve of warm drains at 10/50/100 ms budgets through
+``SearchService.submit(deadline_s=...)`` with per-miss phase blame
+(``serve/deadline_miss_phase``). The met rate *under sustained offered
+load* — the enforced guarantee, admission control on — is
+benchmarks/load_bench.py's job (DESIGN.md §17).
 
 ``run()`` returns ``(rows, report)``: CSV rows for the harness and a
 nested dict that ``benchmarks/run.py --json`` writes to BENCH_serve.json
@@ -358,29 +361,49 @@ def run(smoke: bool = False):
         "shared_batches": mstats["plans"]["shared_batches"],
         "est_vs_measured": mstats["plans"]["est_vs_measured"],
     }
-    budget_s = 0.05
-    tickets = [meng.submit(q, deadline_s=budget_s) for q in mixed]
-    meng.drain()
-    met = sum(1 for t in tickets if t.response.deadline_met)
-    met_rate = met / max(len(tickets), 1)
-    waits = [t.response.queue_wait_s for t in tickets]
-    miss_blame = meng.stats_snapshot()["deadlines"]["miss_blame"]
-    rep["deadline"] = {
-        "budget_ms": budget_s * 1e3,
-        "met_rate": met_rate,
-        "n": len(tickets),
-        "queue_wait_p50_us": float(np.percentile(waits, 50)) * 1e6,
-        "miss_blame": miss_blame,
-    }
+    # One warm drain per budget (10/50/100 ms): the met-rate curve over
+    # budgets separates "the budget is tight for this hardware" (10 ms)
+    # from "the serving loop is broken" (100 ms) — a single point cannot.
+    # rep["deadline"] keeps the 50 ms summary as its top-level fields
+    # (the tracked headline) with the full curve under "budgets".
+    rep["deadline"] = {"budgets": {}}
+    total_missed = 0
+    blame_all: dict = {}
+    for budget_s in (0.010, 0.050, 0.100):
+        blame_before = meng.stats_snapshot()["deadlines"]["miss_blame"]
+        tickets = [meng.submit(q, deadline_s=budget_s) for q in mixed]
+        meng.drain()
+        met = sum(1 for t in tickets if t.response.deadline_met)
+        met_rate = met / max(len(tickets), 1)
+        waits = [t.response.queue_wait_s for t in tickets]
+        blame_after = meng.stats_snapshot()["deadlines"]["miss_blame"]
+        miss_blame = {
+            k: v - blame_before.get(k, 0)
+            for k, v in blame_after.items() if v > blame_before.get(k, 0)
+        }
+        total_missed += len(tickets) - met
+        for k, v in miss_blame.items():
+            blame_all[k] = blame_all.get(k, 0) + v
+        entry = {
+            "budget_ms": budget_s * 1e3,
+            "met_rate": met_rate,
+            "n": len(tickets),
+            "queue_wait_p50_us": float(np.percentile(waits, 50)) * 1e6,
+            "miss_blame": miss_blame,
+        }
+        ms = round(budget_s * 1e3)
+        rep["deadline"]["budgets"][f"{ms}ms"] = entry
+        if ms == 50:
+            rep["deadline"].update(entry)
+        rows.append((
+            f"serve/deadline_met_rate_{ms}ms", met_rate,
+            f"met={met}/{len(tickets)};routes={len(rep['plans']['routes'])};"
+            f"executables={rep['plans']['executables']};"
+            f"shared_batches={rep['plans']['shared_batches']}",
+        ))
     rows.append((
-        "serve/deadline_met_rate_50ms", met_rate,
-        f"met={met}/{len(tickets)};routes={len(rep['plans']['routes'])};"
-        f"executables={rep['plans']['executables']};"
-        f"shared_batches={rep['plans']['shared_batches']}",
-    ))
-    rows.append((
-        "serve/deadline_miss_phase", float(len(tickets) - met),
-        ";".join(f"blame_{k}={v}" for k, v in sorted(miss_blame.items()))
+        "serve/deadline_miss_phase", float(total_missed),
+        ";".join(f"blame_{k}={v}" for k, v in sorted(blame_all.items()))
         or "blame_none=0",
     ))
     return rows, rep

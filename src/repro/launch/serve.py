@@ -4,6 +4,13 @@ serving/service.py; examples/serve_search.py is the narrated
 walkthrough).
 
   PYTHONPATH=src python -m repro.launch.serve --n-docs 3000 --requests 512 --deadline-ms 50
+
+With ``--load-qps`` the launcher replays an open-loop Poisson trace
+instead of one closed batch, and ``--admission`` turns on the §17
+deadline control loop (admission verdicts, shedding, EDF splits):
+
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 3000 \
+      --deadline-ms 50 --admission --load-qps 2000
 """
 
 from __future__ import annotations
@@ -32,6 +39,16 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the drain's span tree as Chrome JSON trace "
                          "format (load in https://ui.perfetto.dev)")
+    ap.add_argument("--admission", action="store_true",
+                    help="enable the §17 deadline control loop (admission "
+                         "verdicts, load shedding, EDF splits); requires "
+                         "--deadline-ms to have any effect")
+    ap.add_argument("--load-qps", type=float, default=None, metavar="QPS",
+                    help="replay an open-loop Poisson trace at QPS instead "
+                         "of one closed batch (repro.serving.load); reports "
+                         "met/shed/reject rates")
+    ap.add_argument("--load-duration-s", type=float, default=2.0,
+                    help="open-loop trace length (with --load-qps)")
     args = ap.parse_args()
 
     table, lex = generate_corpus(args.n_docs, mean_doc_len=160, vocab_size=40_000, seed=1)
@@ -41,9 +58,37 @@ def main() -> None:
     cfg = ServeConfig(
         max_batch=args.max_batch, top_k=args.top_k,
         default_deadline_s=args.deadline_ms / 1e3 if deadline_on else None,
+        admission=args.admission,
+        max_queue=4 * args.max_batch if args.admission else None,
     )
     service = SearchService(index, mesh, cfg)
-    for q in sample_stop_queries(table, lex, args.requests, window=3, seed=2):
+    queries = sample_stop_queries(table, lex, args.requests, window=3, seed=2)
+
+    if args.load_qps is not None:
+        from repro.serving import poisson_arrivals, run_open_loop, warm_service
+
+        warm_service(service, queries)
+        arrivals = poisson_arrivals(args.load_qps, args.load_duration_s, seed=2)
+        rep = run_open_loop(
+            service, queries, arrivals,
+            deadline_s=args.deadline_ms / 1e3 if deadline_on else 0.05,
+            offered_qps=len(arrivals) / args.load_duration_s,
+        )
+        print(f"open loop: offered {rep.offered_qps:.0f} qps for "
+              f"{args.load_duration_s:.1f}s -> served {rep.n_served}/"
+              f"{rep.n_offered} (goodput {rep.achieved_qps:.0f} qps); "
+              f"met={rep.met_rate:.3f} shed={rep.shed_rate:.3f} "
+              f"reject={rep.reject_rate:.3f}")
+        stats = service.stats_snapshot()
+        if args.admission:
+            print(f"admission: {stats['admission']}")
+        if args.trace_out:
+            trace = service.write_trace(args.trace_out)
+            print(f"wrote {len(trace['traceEvents'])} trace events to "
+                  f"{args.trace_out} (open in https://ui.perfetto.dev)")
+        return
+
+    for q in queries:
         service.submit(q)
     t0 = time.time()
     responses = service.drain()

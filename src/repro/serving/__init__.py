@@ -24,6 +24,12 @@ Public API
 * :class:`SearchService` / :class:`ServeConfig` / :class:`SearchTicket`
   / :class:`SearchResponse` — the serving facade.
 * :class:`QueryPlan` — the inspectable routing decision.
+* :class:`AdmissionController` / :class:`AdmissionVerdict` — the §17
+  deadline control loop consulted by ``submit()`` on an
+  ``admission=True`` engine (fast-reject, degrade, shed).
+* :class:`LoadReport` / :func:`run_open_loop` / :func:`run_closed_loop`
+  / :func:`poisson_arrivals` / :func:`bursty_arrivals` — the open-loop
+  load harness that exercises the control loop at a fixed offered rate.
 * :class:`SearchServingEngine` — **deprecated** monolithic API, kept as
   a thin shim over ``SearchService``.
 * :class:`PackedPostingCache` — LRU memo of the padded per-key device
@@ -36,8 +42,20 @@ Public API
 ``repro.serving.executors`` render the full reference.
 """
 
+from repro.serving.admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionVerdict,
+)
 from repro.serving.engine import SearchServingEngine  # noqa: F401 (deprecated)
 from repro.serving.lm_batcher import LMContinuousBatcher  # noqa: F401
+from repro.serving.load import (  # noqa: F401
+    LoadReport,
+    bursty_arrivals,
+    poisson_arrivals,
+    run_closed_loop,
+    run_open_loop,
+    warm_service,
+)
 from repro.serving.pack_cache import PackedPostingCache  # noqa: F401
 from repro.serving.planner import QueryPlan  # noqa: F401
 from repro.serving.service import (  # noqa: F401
@@ -49,7 +67,10 @@ from repro.serving.service import (  # noqa: F401
 )
 
 __all__ = [
+    "AdmissionController",
+    "AdmissionVerdict",
     "LMContinuousBatcher",
+    "LoadReport",
     "PackedPostingCache",
     "QueryPlan",
     "SearchRequest",
@@ -58,4 +79,9 @@ __all__ = [
     "SearchServingEngine",
     "SearchTicket",
     "ServeConfig",
+    "bursty_arrivals",
+    "poisson_arrivals",
+    "run_closed_loop",
+    "run_open_loop",
+    "warm_service",
 ]

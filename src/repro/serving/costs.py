@@ -1,4 +1,7 @@
-"""Cost-driven payload arbitration for the planner (DESIGN.md §16).
+"""Measured-cost models for the serving tier: cost-driven payload
+arbitration for the planner (DESIGN.md §16) and the step-cost
+predictor behind admission control and EDF group splitting
+(:class:`StepCostPredictor`, DESIGN.md §17).
 
 The static payload rule ("compressed engine => delta16 when the bucket
 is block-aligned, else offsets") encodes a bytes-per-posting argument,
@@ -53,6 +56,94 @@ def _arm(payload: str) -> str:
     """delta16 and offsets are one arm: which of them serves is the
     packer's uint16-overflow verdict, not a planner choice."""
     return PAYLOAD_RAW if payload == PAYLOAD_RAW else "compressed"
+
+
+class StepCostPredictor:
+    """Predicted wall-clock batch cost per (step_family, B, L-bucket) —
+    the admission controller's time model (DESIGN.md §17).
+
+    Prediction order, per shape:
+
+    1. the live measured ``serve.batch.*`` whole-batch p50 (host
+       pack/compress/decode included) for the exact or nearest measured
+       shape of the family, scaled by the slot ratio — step work is
+       linear in B and L; the run-only ``serve.step.*`` p50 backs it
+       up when only the step metric exists;
+    2. the *unit estimate* when no measurement exists: the planner's
+       ``est_step_cost`` slots converted at
+       ``config.unit_us_per_kslot`` — deliberately crude, but it makes
+       a cold controller monotone in the same shape variables the
+       measured model is, so admission decisions degrade gracefully
+       instead of being unavailable;
+
+    plus the mean observed AOT compile time whenever the shape has no
+    executable yet (a batch routed to a cold shape pays the first-call
+    compile, and admission/splitting must not pretend it is free). Two
+    warmth regimes:
+
+    * default (admission, backlog, drain horizon): the penalty applies
+      only while the whole (family, L-bucket) is cold at *every* B —
+      once some B serves warm, a new B-bucket's one-off compile is
+      amortized over the service lifetime. Pricing it into every
+      admit would cold-reject all traffic whose exact B never ran,
+      and what is never admitted never warms (a reject spiral);
+    * ``strict_warm=True`` (EDF split decisions): the exact (B, L)
+      shape must be warm — a mid-drain split onto a cold B pays the
+      compile *inside* the very deadline it is trying to save, so the
+      split planner must see the true first-call cost.
+
+    ``headroom`` scales every prediction: measured p50s under-predict
+    the tail the deadline verdict is judged on, so the controller plans
+    against ``headroom ×`` the median."""
+
+    def __init__(self, executor, config, streams_of):
+        self.executor = executor
+        self.config = config
+        self.streams_of = streams_of
+        # per-shape prediction memo: reading a measured p50 sorts the
+        # histogram's sample window, which is far too expensive to do
+        # per candidate per submit at serving rates — the admission
+        # path would stall the very drains it schedules around.
+        # invalidate() is called once per drain (the only place new
+        # measurements land), so between drains predictions are O(1)
+        self._memo: dict[tuple, float] = {}
+
+    def invalidate(self) -> None:
+        """Drop memoized predictions (new measurements just landed)."""
+        self._memo.clear()
+
+    def batch_s(self, family: str, B: int, bucket: int,
+                strict_warm: bool = False) -> float:
+        key = (family, B, bucket, strict_warm)
+        cached = self._memo.get(key)
+        if cached is not None:
+            return cached
+        cfg = self.config
+        us = self.executor.measured_batch_us(family, B, bucket)
+        if us is None:
+            us = self.executor.measured_step_us(family, B, bucket)
+        if us is None:
+            slots = self.streams_of(family, cfg) * bucket * cfg.doc_shards
+            us = cfg.unit_us_per_kslot * B * slots / 1000.0
+        warm = (self.executor.is_warm(family, B, bucket) if strict_warm
+                else self.executor.family_warm(family, bucket))
+        if not warm:
+            us += self.executor.compile_penalty_s() * 1e6
+        out = us * cfg.admission_headroom / 1e6
+        self._memo[key] = out
+        return out
+
+    def scalar_s(self) -> float:
+        """Per-request cost of the scalar backstop engine."""
+        cached = self._memo.get("scalar")
+        if cached is not None:
+            return cached
+        us = self.executor.measured_scalar_us()
+        if us is None:
+            us = self.config.unit_scalar_us
+        out = us * self.config.admission_headroom / 1e6
+        self._memo["scalar"] = out
+        return out
 
 
 class PayloadCostModel:

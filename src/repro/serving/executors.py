@@ -288,6 +288,15 @@ class CompiledExecutor:
                     f"serve.step.{step_family}.B{B_pad}.L{bucket}",
                     (t_exec - t_compile) * 1e6,
                 )
+                # whole warm batch wall-clock (host pack/compress/decode
+                # included, compile excluded): what one more batch of
+                # the shape actually costs the serving loop — the
+                # admission predictor's primitive; the step metric alone
+                # under-predicts it badly on host-bound small batches
+                self.metrics.observe(
+                    f"serve.batch.{step_family}.B{B_pad}.L{bucket}",
+                    ((t1 - t0) - phases["compile"]) * 1e6,
+                )
                 self.measured_keys.add((step_family, B_pad, bucket))
                 if self.costs is not None:
                     # payload arbitration sees the whole warm batch cost
@@ -352,6 +361,78 @@ class CompiledExecutor:
             return step(*args)
 
     # -- measured-cost surface ---------------------------------------------
+    def measured_step_us(self, family: str, B: int, L: int) -> float | None:
+        """Measured warm batch run time (p50 µs) for one (family, B, L)
+        shape — the admission controller's prediction primitive
+        (DESIGN.md §17). Falls back from the exact shape to the nearest
+        measured shape of the family scaled by the slot ratio
+        ``(B*L) / (B'*L')`` (step work is linear in both axes); None
+        when the family has no measurement at all (the caller then uses
+        the unit estimate)."""
+        return self._nearest_p50("serve.step", family, B, L)
+
+    def measured_batch_us(self, family: str, B: int, L: int) -> float | None:
+        """Measured warm *whole-batch* wall-clock (p50 µs, host
+        pack/compress/decode included, compile excluded) for one
+        (family, B, L) shape — what one more batch of the shape costs
+        the serving loop, and therefore what admission control and EDF
+        splitting must predict with (the run-only step metric
+        under-predicts host-bound small batches badly). Same
+        nearest-shape fallback as :meth:`measured_step_us`."""
+        return self._nearest_p50("serve.batch", family, B, L)
+
+    def _nearest_p50(self, metric: str, family: str, B: int,
+                     L: int) -> float | None:
+        hist = self.metrics.get(f"{metric}.{family}.B{B}.L{L}")
+        if hist is not None and hist.count:
+            return hist.percentile(50)
+        best = None
+        for (fam, Bm, Lm) in self.measured_keys:
+            if fam != family:
+                continue
+            h = self.metrics.get(f"{metric}.{fam}.B{Bm}.L{Lm}")
+            if h is None or not h.count:
+                continue
+            # prefer the measured shape closest in slot count
+            dist = abs(Bm * Lm - B * L)
+            if best is None or dist < best[0]:
+                best = (dist, h.percentile(50) * (B * L) / (Bm * Lm))
+        return best[1] if best is not None else None
+
+    def is_warm(self, family: str, B: int, L: int) -> bool:
+        """Whether some executable of the family already exists at
+        (B, L) — a batch routed to a cold shape pays the first-call AOT
+        compile, which admission prediction must price in."""
+        return any(kb == B and kl == L and _kind_family(kind) == family
+                   for (kind, kb, kl) in self._aot)
+
+    def family_warm(self, family: str, L: int) -> bool:
+        """Whether the family has *any* warm B at this L-bucket. The
+        admission predictor amortizes the compile penalty once this
+        holds (a new B-bucket of an already-serving (family, L) pays
+        one compile over the service lifetime; pricing it into every
+        singleton admit cold-rejects all traffic a drain would happily
+        batch onto the warm shapes — a self-sustaining reject spiral,
+        since what is never admitted never warms)."""
+        return any(kl == L and _kind_family(kind) == family
+                   for (kind, _kb, kl) in self._aot)
+
+    def compile_penalty_s(self) -> float:
+        """Predicted first-call compile cost for a cold (kind, B, L)
+        shape: the mean of the observed AOT compile times (0.0 before
+        any compile has run — a cold service has nothing better, and
+        the unit step estimate dominates its predictions anyway)."""
+        if not self.compile_times:
+            return 0.0
+        return sum(self.compile_times.values()) / len(self.compile_times)
+
+    def measured_scalar_us(self) -> float | None:
+        """Measured per-request p50 of the scalar backstop engine."""
+        hist = self.metrics.get("serve.step.scalar")
+        if hist is not None and hist.count:
+            return hist.percentile(50)
+        return None
+
     def measured_cost(self, family: str, bucket: int) -> dict:
         """Measured run-time percentiles for every B-bucket of one
         (step_family, L-bucket) executable, plus its compile time and

@@ -19,6 +19,7 @@ this module is that decision as a first-class object.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 from repro.core.lexicon import UNKNOWN_FL
@@ -97,7 +98,12 @@ class QueryPlan:
       ``SearchService.explain(q, costs=True)`` attaches the §15
       measured-cost record here (per-B run-time percentiles, compile
       time, XLA cost summary, est-vs-measured ratio) on a *copy* of the
-      memoized plan."""
+      memoized plan;
+    * ``degraded`` — set by :func:`degrade` when admission control
+      reroutes an over-budget plan to a smaller bucket (DESIGN.md §17):
+      the packers truncate each key's posting rows to the smaller
+      padded length, so the response searches a bounded posting prefix
+      (results ⊆ the full route's candidate set) within the budget."""
 
     qtype: QueryType | None
     route: str
@@ -108,6 +114,7 @@ class QueryPlan:
     fallback_reason: str | None = None
     selection: object = None
     measured: dict | None = None
+    degraded: bool = False
 
     @property
     def is_compiled(self) -> bool:
@@ -185,6 +192,31 @@ def _compiled(qtype, route, bucket, config, selection, step_family=None,
 
 def _scalar(qtype, reason: str) -> QueryPlan:
     return QueryPlan(qtype=qtype, route=ROUTE_SCALAR, fallback_reason=reason)
+
+
+def degrade(plan: QueryPlan, bucket: int, config, costs=None) -> QueryPlan:
+    """An over-budget compiled plan rerouted to a cheaper bucket — the
+    admission controller's degraded-mode path (DESIGN.md §17).
+
+    The key selection is unchanged; only the L-bucket shrinks. The row
+    packers truncate each key's postings to the smaller padded length
+    (``_fill_partitioned`` keeps the first ``L/doc_shards`` per shard
+    segment, i.e. the lowest doc ranges), so the degraded step scans a
+    *bounded posting prefix*: its candidate matches are a subset of the
+    full route's, at ``bucket / plan.bucket`` of the step cost. The
+    response is marked ``status="degraded"`` so clients know the
+    guarantee was bought with completeness."""
+    if not plan.is_compiled or bucket >= plan.bucket:
+        raise ValueError(f"cannot degrade {plan.route}@{plan.bucket} "
+                         f"to bucket {bucket}")
+    return dataclasses.replace(
+        plan,
+        bucket=bucket,
+        payload=_payload(bucket, config, plan.step_family, costs),
+        est_step_cost=(_streams(plan.step_family, config) * bucket
+                       * config.doc_shards),
+        degraded=True,
+    )
 
 
 def plan(request, snapshot, config, costs=None) -> QueryPlan:

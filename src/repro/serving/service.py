@@ -27,8 +27,23 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.core.jax_search import batch_size_bucket
 from repro.obs import MetricsRegistry, Tracer, chrome_trace, write_chrome_trace
 from repro.serving import planner as _planner
+from repro.serving.admission import (
+    ADMIT,
+    BLAME_INFEASIBLE,
+    BLAME_SHED,
+    DEGRADE,
+    REASON_OPTIMISTIC,
+    REJECT_INFEASIBLE,
+    STATUS_DEGRADED,
+    STATUS_OK,
+    STATUS_REJECTED,
+    STATUS_SHED,
+    AdmissionController,
+    AdmissionVerdict,
+)
 from repro.serving.executors import (
     CompiledExecutor,
     ExecResult,
@@ -36,7 +51,7 @@ from repro.serving.executors import (
     empty_results,
     zero_phases,
 )
-from repro.serving.costs import PayloadCostModel
+from repro.serving.costs import PayloadCostModel, StepCostPredictor
 from repro.serving.pack_cache import PackedPostingCache
 from repro.serving.planner import QueryPlan
 
@@ -70,6 +85,36 @@ class ServeConfig:
       path, DESIGN.md §16);
     * ``default_deadline_s`` — deadline attached to submits that don't
       pass one (None = no deadline);
+    * ``admission`` — the §17 deadline control loop: ``submit()``
+      consults an :class:`repro.serving.admission.AdmissionController`
+      per deadline-carrying request, fast-rejecting infeasible budgets,
+      degrading over-budget plans to a truncated-prefix route and
+      shedding predicted-miss traffic while overloaded (default off:
+      without it deadlines are measured, never enforced);
+    * ``max_queue`` — bounded submit queue (admission engines only):
+      past the bound the deadline-aware drop policy sheds the queued
+      request that is already predicted infeasible, or the newcomer
+      when every queued request is still feasible — never the FIFO
+      head;
+    * ``degrade`` — allow the admission controller to reroute an
+      over-budget compiled plan to a smaller bucket
+      (``planner.degrade``) instead of rejecting it outright;
+    * ``split_budget`` / ``split_max_urgent`` — EDF group splitting
+      (§17): max split dispatches per drain (0 disables) and max size
+      of one urgent sub-batch;
+    * ``shed_enter_s`` / ``shed_exit_s`` — overload hysteresis
+      thresholds on the (EWMA-smoothed) predicted backlog (enter >
+      exit, so transient bursts cannot flap the shed decision);
+    * ``admit_margin`` / ``admit_optimism`` — the controller's reserve
+      policy: admit when predicted completion fits ``margin ×`` the
+      budget (the reserve absorbs work admitted later that lands
+      ahead), optimistically up to ``optimism ×`` that bound while not
+      latched overloaded;
+    * ``admission_headroom`` — multiplier on every predicted cost
+      (measured p50s under-predict the tail the deadline is judged on);
+    * ``unit_us_per_kslot`` / ``unit_scalar_us`` — the cold-start cost
+      fallbacks used before any measured ``serve.step.*`` samples
+      exist;
     * ``trace_enabled`` / ``trace_capacity`` — the §15 span tracer (a
       bounded ring of completed spans; disabling reduces the obs
       overhead to the per-phase timestamps);
@@ -94,6 +139,18 @@ class ServeConfig:
     payload_cost_driven: bool = True
     use_pallas: bool = False
     default_deadline_s: float | None = None
+    admission: bool = False
+    max_queue: int | None = None
+    degrade: bool = True
+    split_budget: int = 2
+    split_max_urgent: int = 8
+    shed_enter_s: float = 0.100
+    shed_exit_s: float = 0.025
+    admit_margin: float = 0.4
+    admit_optimism: float = 1.2
+    admission_headroom: float = 1.3
+    unit_us_per_kslot: float = 1.0
+    unit_scalar_us: float = 5000.0
     trace_enabled: bool = True
     trace_capacity: int = 8192
     metrics_capacity: int = 4096
@@ -116,12 +173,25 @@ class SearchRequest:
 class SearchTicket:
     """Future-like handle returned by :meth:`SearchService.submit`,
     resolved in place by the next :meth:`SearchService.drain` (there is
-    no background thread — resolution is the drain that serves it)."""
+    no background thread — resolution is the drain that serves it).
+
+    On an admission-controlled engine (DESIGN.md §17) a ticket can also
+    resolve *at submit time*: rejected/shed requests carry a
+    :class:`SearchResponse` with ``status="rejected"``/``"shed"`` and
+    empty results — ``result()`` never hangs on a ticket no drain will
+    serve. ``verdict`` records the admission decision;
+    ``degraded_bucket`` the cheaper bucket a degraded admit was
+    rerouted to (applied by the resolving drain against its own pinned
+    snapshot)."""
 
     lemma_ids: list
     deadline_s: float | None = None
     arrival: float = field(default_factory=time.perf_counter)
     response: "SearchResponse | None" = None
+    verdict: AdmissionVerdict | None = None
+    degraded_bucket: int | None = None
+    plan: QueryPlan | None = None
+    group_key: tuple | None = None  # internal: pending-backlog accounting
 
     @property
     def done(self) -> bool:
@@ -152,7 +222,14 @@ class SearchResponse:
     batch that served it, on every route including scalar fallback and
     empty. ``deadline_blame`` names the largest non-queue phase when
     the deadline was missed — a missed budget names the phase that blew
-    it — and the queue when waiting alone exceeded the budget."""
+    it — and the queue when waiting alone exceeded the budget.
+
+    ``status`` is the §17 serving outcome: ``ok`` (served as planned),
+    ``degraded`` (served from a truncated-prefix route the admission
+    controller rerouted it to), ``rejected`` (budget infeasible even on
+    an idle system — resolved at submit, empty results) or ``shed``
+    (dropped under overload — resolved at submit or by the bounded
+    queue, empty results)."""
 
     results: dict
     latency_s: float
@@ -166,6 +243,7 @@ class SearchResponse:
     started_at: float = 0.0
     finished_at: float = 0.0
     deadline_blame: str | None = None
+    status: str = STATUS_OK
 
     @property
     def e2e_s(self) -> float:
@@ -254,6 +332,19 @@ class SearchService:
         )
         self.scalar = ScalarExecutor(cfg, metrics=self.metrics,
                                      tracer=self.tracer)
+        # §17 deadline control loop: predictor + controller consulted at
+        # submit; pending-group counts and the in-flight horizon feed
+        # the backlog estimate the controller judges against
+        self.predictor = StepCostPredictor(self.compiled, cfg,
+                                           _planner._streams)
+        self.admission = (
+            AdmissionController(cfg.shed_enter_s, cfg.shed_exit_s,
+                                margin=cfg.admit_margin,
+                                optimism=cfg.admit_optimism)
+            if cfg.admission else None
+        )
+        self._pending: dict[tuple, int] = {}
+        self._inflight_until = 0.0
         self._queue: list[SearchTicket] = []
         self._queue_lock = threading.Lock()
         self._stats_lock = threading.Lock()
@@ -287,6 +378,13 @@ class SearchService:
                           "miss_blame": {}},
             "pack_cache": {}, "compressed_cache": {},
         }
+        if self.admission is not None:
+            self.stats["admission"] = {
+                "admitted": 0, "optimistic": 0, "degraded": 0,
+                "rejected_infeasible": 0, "shed_overload": 0,
+                "queue_shed": 0, "expired": 0, "splits": 0,
+                "overload_transitions": 0,
+            }
 
     # -- planning ----------------------------------------------------------
     def _plan(self, index, lemma_ids) -> QueryPlan:
@@ -365,21 +463,213 @@ class SearchService:
             self.stats["refreshes"] += 1
 
     # -- serving -----------------------------------------------------------
-    def submit(self, lemma_ids, deadline_s: float | None = None) -> SearchTicket:
+    def submit(self, lemma_ids, deadline_s: float | None = None,
+               arrival: float | None = None) -> SearchTicket:
         """Queue one request (a lemma-id list, i.e. one sub-query of
         ``core.query.build_subqueries``) for the next :meth:`drain`;
         returns its :class:`SearchTicket`. ``deadline_s`` is a budget
         from *now* (submission): the resolving drain reports
         ``deadline_met`` per response and prioritizes
-        tighter-deadline groups. Thread-safe and non-blocking — no
-        planning, packing or device work happens until the batcher
-        cuts a batch."""
+        tighter-deadline groups. ``arrival`` backdates the request to a
+        scheduled perf_counter instant (trace replay / the open-loop
+        load harness, DESIGN.md §17): queue wait, the deadline verdict
+        *and* the admission budget are all judged from it. Thread-safe;
+        on a non-admission engine no planning, packing or device work
+        happens until the batcher cuts a batch — with
+        ``config.admission`` the §17 controller plans the request
+        (memoized) and judges its budget here, so a rejected or shed
+        ticket resolves immediately and never hangs."""
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
         ticket = SearchTicket(list(lemma_ids), deadline_s=deadline_s)
-        with self._queue_lock:
-            self._queue.append(ticket)
+        if arrival is not None:
+            ticket.arrival = arrival
+        if self.admission is None:
+            with self._queue_lock:
+                self._queue.append(ticket)
+            return ticket
+        self._admit(ticket)
         return ticket
+
+    def _group_key(self, p: QueryPlan) -> tuple:
+        if p.route == _planner.ROUTE_EMPTY:
+            return ("empty", None)
+        if p.route == _planner.ROUTE_SCALAR:
+            return ("scalar", None)
+        return (p.step_family, p.bucket)
+
+    def _backlog_locked(self, now: float) -> float:
+        """Predicted seconds of queued + in-flight work (queue lock
+        held): the remaining horizon of the currently executing drain
+        plus each pending group's batch-count × predicted batch cost —
+        per-(family, bucket) counts, not per-request sums, because
+        batching amortizes (16 queued qt5@4096 requests are one batch,
+        not 16)."""
+        backlog = max(0.0, self._inflight_until - now)
+        mb = self.config.max_batch
+        for (family, bucket), n in self._pending.items():
+            if n <= 0 or family == "empty":
+                continue
+            if family == "scalar":
+                backlog += n * self.predictor.scalar_s()
+            else:
+                B = batch_size_bucket(min(n, mb), mb)
+                backlog += (-(-n // mb)) * self.predictor.batch_s(
+                    family, B, bucket)
+        return backlog
+
+    def _admit(self, ticket: SearchTicket) -> None:
+        """The §17 admission decision for one submit: predict the
+        request's completion (backlog + its group's batch cost, per
+        :class:`StepCostPredictor`), let the controller pick the
+        least-degraded feasible route, and either enqueue the ticket or
+        resolve it right here as rejected/shed."""
+        cfg = self.config
+        mb = cfg.max_batch
+        with self.tracer.span("admission"):
+            p = self._plan(self.index, ticket.lemma_ids)
+            gkey = self._group_key(p)
+            now = time.perf_counter()
+            with self._queue_lock:
+                backlog = self._backlog_locked(now)
+                pend = self._pending.get(gkey, 0)
+            if p.route == _planner.ROUTE_EMPTY:
+                candidates = [(None, 0.0)]
+                idle_s = 0.0
+            elif p.route == _planner.ROUTE_SCALAR:
+                candidates = [(None, self.predictor.scalar_s())]
+                idle_s = candidates[0][1]
+            else:
+                B = batch_size_bucket(min(pend + 1, mb), mb)
+                candidates = [(p.bucket,
+                               self.predictor.batch_s(p.step_family, B,
+                                                      p.bucket))]
+                if cfg.degrade:
+                    # largest-first below the planned bucket, so "first
+                    # fit" is "least degradation"
+                    candidates += [
+                        (b, self.predictor.batch_s(p.step_family, B, b))
+                        for b in reversed(cfg.buckets) if b < p.bucket
+                    ]
+                # infeasibility is judged on a B=1 batch of the cheapest
+                # candidate route — serving this request *alone*, not
+                # with the crowd it happens to arrive into
+                idle_s = min(self.predictor.batch_s(p.step_family, 1, b)
+                             for b, _ in candidates)
+            budget = (None if ticket.deadline_s is None
+                      else ticket.arrival + ticket.deadline_s - now)
+            verdict = self.admission.consider(candidates, backlog, budget,
+                                              idle_cost_s=idle_s)
+            ticket.verdict = verdict
+            self.metrics.inc(f"serve.admission.{verdict.decision}")
+            with self._stats_lock:
+                adm = self.stats["admission"]
+                if verdict.decision == ADMIT:
+                    adm["admitted"] += 1
+                    if verdict.reason == REASON_OPTIMISTIC:
+                        adm["optimistic"] += 1
+                elif verdict.decision == DEGRADE:
+                    adm["admitted"] += 1
+                    adm["degraded"] += 1
+                elif verdict.decision == REJECT_INFEASIBLE:
+                    adm["rejected_infeasible"] += 1
+                else:
+                    adm["shed_overload"] += 1
+                adm["overload_transitions"] = self.admission.transitions
+            if not verdict.admitted:
+                status = (STATUS_REJECTED
+                          if verdict.decision == REJECT_INFEASIBLE
+                          else STATUS_SHED)
+                with self.tracer.span(f"admission.{verdict.decision}",
+                                      route=p.route):
+                    self._resolve_unserved(ticket, p, status)
+                return
+            if verdict.decision == DEGRADE:
+                ticket.degraded_bucket = verdict.bucket
+                gkey = (p.step_family, verdict.bucket)
+            ticket.plan = p
+            ticket.group_key = gkey
+            self._enqueue(ticket, gkey)
+
+    def _enqueue(self, ticket: SearchTicket, gkey: tuple) -> None:
+        """Append under the bounded-queue policy: past ``max_queue`` the
+        deadline-aware drop sheds whichever request is already predicted
+        infeasible (least remaining budget among those the backlog has
+        outrun) — the newcomer only when every queued request is still
+        feasible. Never a FIFO head-drop."""
+        cfg = self.config
+        victim = None
+        with self._queue_lock:
+            if cfg.max_queue is not None and len(self._queue) >= cfg.max_queue:
+                now = time.perf_counter()
+                backlog = self._backlog_locked(now)
+                victim = self._infeasible_victim_locked(now, backlog)
+                if victim is not None:
+                    self._queue.remove(victim)
+                    if victim.group_key is not None:
+                        self._pending[victim.group_key] = max(
+                            0, self._pending.get(victim.group_key, 1) - 1)
+                    self._queue.append(ticket)
+                    self._pending[gkey] = self._pending.get(gkey, 0) + 1
+                else:
+                    victim = ticket  # full of feasible work: shed newcomer
+            else:
+                self._queue.append(ticket)
+                self._pending[gkey] = self._pending.get(gkey, 0) + 1
+        if victim is not None:
+            self.metrics.inc("serve.admission.queue_shed")
+            with self._stats_lock:
+                self.stats["admission"]["queue_shed"] += 1
+            with self.tracer.span("admission.queue_shed"):
+                self._resolve_unserved(victim, victim.plan, STATUS_SHED)
+
+    def _infeasible_victim_locked(self, now: float,
+                                  backlog_s: float) -> SearchTicket | None:
+        """The queued ticket the backlog has most clearly outrun: least
+        remaining budget among deadline-carrying tickets whose remaining
+        budget is below the predicted backlog. None when every queued
+        request is still feasible."""
+        victim, victim_rem = None, None
+        for t in self._queue:
+            if t.deadline_s is None:
+                continue
+            rem = t.arrival + t.deadline_s - now
+            if rem < backlog_s and (victim_rem is None or rem < victim_rem):
+                victim, victim_rem = t, rem
+        return victim
+
+    def _resolve_unserved(self, ticket: SearchTicket, p: QueryPlan | None,
+                          status: str) -> None:
+        """Resolve a rejected/shed ticket in place with empty results —
+        ``result()`` must never hang on a ticket no drain will serve.
+        Rejected/shed requests with a deadline count as misses with the
+        §17 blame vocabulary (``infeasible`` / ``shed``); deadline-less
+        ones count as unset."""
+        now = time.perf_counter()
+        wait = max(now - ticket.arrival, 0.0)
+        blame = None
+        if ticket.deadline_s is not None:
+            blame = (BLAME_INFEASIBLE if status == STATUS_REJECTED
+                     else BLAME_SHED)
+            with self._stats_lock:
+                dl = self.stats["deadlines"]
+                dl["missed"] += 1
+                dl["miss_blame"][blame] = dl["miss_blame"].get(blame, 0) + 1
+            self.metrics.inc(f"serve.deadline.miss_blame.{blame}")
+        else:
+            with self._stats_lock:
+                self.stats["deadlines"]["unset"] += 1
+        resp = SearchResponse(
+            results=empty_results(), latency_s=0.0, bucket=0, batch_size=0,
+            path=_route_to_path(p.route) if p is not None else "unserved",
+            plan=p, deadline_met=False if ticket.deadline_s is not None
+            else None,
+            queue_wait_s=wait,
+            phases={"queue": wait, "plan": 0.0, **zero_phases()},
+            started_at=now, finished_at=now, deadline_blame=blame,
+            status=status,
+        )
+        ticket.response = resp
 
     def drain(self) -> list[SearchResponse]:
         """Serve everything queued, resolving every pending ticket and
@@ -393,7 +683,13 @@ class SearchService:
         ladder, and groups are served earliest-deadline first
         (deadline-less groups follow, largest first). Each response
         carries its plan, executed path, bucket, batch size, wall-clock
-        batch latency, queue wait and deadline verdict."""
+        batch latency, queue wait and deadline verdict.
+
+        On an admission engine, requests whose deadline already expired
+        while queued are shed here instead of served (a guaranteed miss
+        would still burn a batch slot, §17): they resolve through their
+        ticket with ``status="shed"`` and are *not* in the returned
+        list."""
         if not self._queue:
             return []
         index = self.index
@@ -403,6 +699,14 @@ class SearchService:
         # silently dropped into the already-grouped list
         with self._queue_lock:
             pending, self._queue = self._queue, []
+            self._pending = {}
+        # this drain lands new step measurements; predictions made from
+        # the previous batch of measurements expire now
+        self.predictor.invalidate()
+        if self.admission is not None:
+            pending = self._drop_expired(pending)
+            if not pending:
+                return []
         t_drain0 = time.perf_counter()
         slots: list = [None] * len(pending)
         with self.tracer.span("drain", requests=len(pending)):
@@ -412,7 +716,16 @@ class SearchService:
             with self.tracer.span("plan", n=len(pending)):
                 for t in pending:
                     tp0 = time.perf_counter()
-                    plans.append(self._plan(index, t.lemma_ids))
+                    p = self._plan(index, t.lemma_ids)
+                    # a degraded admit reroutes to the cheaper bucket
+                    # here, against *this* drain's pinned snapshot (the
+                    # memoized plan stays untouched for other requests)
+                    if (t.degraded_bucket is not None and p.is_compiled
+                            and t.degraded_bucket < p.bucket):
+                        p = _planner.degrade(p, t.degraded_bucket,
+                                             self.config,
+                                             costs=self.payload_costs)
+                    plans.append(p)
                     plan_s.append(time.perf_counter() - tp0)
             with self.tracer.span("group"):
                 groups: dict[tuple, list[int]] = {}
@@ -436,7 +749,54 @@ class SearchService:
 
                 order = sorted(groups.items(), key=urgency)
 
+            # publish the drain's predicted work horizon: submits racing
+            # this drain see it as in-flight backlog (the queue itself
+            # was swapped empty above)
+            mb = self.config.max_batch
+            now0 = time.perf_counter()
+            horizon = 0.0
             for (family, bucket), idxs in order:
+                if family == "empty":
+                    continue
+                if family == "scalar":
+                    horizon += len(idxs) * self.predictor.scalar_s()
+                else:
+                    Bg = batch_size_bucket(min(len(idxs), mb), mb)
+                    horizon += (-(-len(idxs) // mb)) * self.predictor.batch_s(
+                        family, Bg, bucket)
+            self._inflight_until = now0 + horizon
+
+            # EDF group splitting (§17): when a tail ticket's budget
+            # cannot survive its whole group, peel an urgent sub-batch
+            # off at a smaller B-bucket — bounded by split_budget extra
+            # dispatches per drain
+            units: list[tuple[tuple, list[int]]] = []
+            splits_left = self.config.split_budget
+            t_acc = 0.0
+            for (family, bucket), idxs in order:
+                split = None
+                if family not in ("empty", "scalar") and splits_left > 0:
+                    split = self._split_urgent(pending, idxs, family,
+                                               bucket, t_acc, now0)
+                if split is not None:
+                    urgent, rest = split
+                    splits_left -= 1
+                    self.metrics.inc("serve.admission.split")
+                    with self._stats_lock:
+                        if "admission" in self.stats:
+                            self.stats["admission"]["splits"] += 1
+                    units.append(((family, bucket), urgent))
+                    units.append(((family, bucket), rest))
+                else:
+                    units.append(((family, bucket), idxs))
+                if family == "scalar":
+                    t_acc += len(idxs) * self.predictor.scalar_s()
+                elif family != "empty":
+                    Bg = batch_size_bucket(min(len(idxs), mb), mb)
+                    t_acc += (-(-len(idxs) // mb)) * self.predictor.batch_s(
+                        family, Bg, bucket)
+
+            for (family, bucket), idxs in units:
                 if family == "empty":
                     now = time.perf_counter()
                     for i in idxs:
@@ -471,12 +831,81 @@ class SearchService:
                 for i, ex in zip(idxs, execs):
                     self._resolve(pending[i], plans[i], slots, i, ex,
                                   plan_s[i])
+        self._inflight_until = 0.0
         self.metrics.observe(
             "serve.drain.total",
             (time.perf_counter() - t_drain0) * 1e6,
         )
         self._finish_stats(plans)
         return slots
+
+    def _drop_expired(self, pending: list) -> list:
+        """Shed requests whose deadline has already passed before any
+        batch work starts (§17, admission engines only): serving an
+        expired request is a *guaranteed* miss that still costs a full
+        batch slot, so it is resolved as shed here and its slot goes to
+        traffic that can still meet its budget. This is the burst-onset
+        backstop — the latch and the margin judge predictions at
+        submit, but a flood arriving inside one drain window can outrun
+        any decision made at its front. Returns the still-live tickets;
+        expired ones resolve via their ticket (they are not in the
+        drain's return list)."""
+        now = time.perf_counter()
+        live, expired = [], []
+        for t in pending:
+            if (t.deadline_s is not None
+                    and t.arrival + t.deadline_s < now):
+                expired.append(t)
+            else:
+                live.append(t)
+        for t in expired:
+            self.metrics.inc("serve.admission.expired")
+            with self._stats_lock:
+                self.stats["admission"]["expired"] += 1
+            with self.tracer.span("admission.expired"):
+                self._resolve_unserved(t, t.plan, STATUS_SHED)
+        return live
+
+    def _split_urgent(self, pending, idxs, family: str, bucket: int,
+                      t_acc: float, now: float):
+        """EDF group splitting (§17): does some deadline-carrying tail
+        of this group miss its budget if served with the whole group,
+        but survive a small urgent sub-batch at a cheaper B-bucket?
+
+        Returns ``(urgent_idxs, rest_idxs)`` or None. ``t_acc`` is the
+        predicted time already committed to earlier EDF groups this
+        drain. The urgent sub-batch must be *strictly* cheaper than the
+        full-group chunk — padding both to the same B-bucket, or
+        splitting onto a cold shape (whose prediction carries the AOT
+        compile penalty), makes splitting pure overhead and is refused
+        here."""
+        cfg = self.config
+        mb = cfg.max_batch
+        B_full = batch_size_bucket(min(len(idxs), mb), mb)
+        chunk_s = self.predictor.batch_s(family, B_full, bucket,
+                                         strict_warm=True)
+        urgent = []
+        for pos, i in enumerate(idxs):
+            t = pending[i]
+            if t.deadline_s is None:
+                continue
+            remaining = t.arrival + t.deadline_s - now
+            # the chunk this request rides finishes after all earlier
+            # chunks of the group
+            finish = t_acc + (pos // mb + 1) * chunk_s
+            if remaining < finish:
+                urgent.append(i)
+        if not urgent or len(urgent) >= len(idxs):
+            return None
+        urgent.sort(key=lambda i: pending[i].arrival + pending[i].deadline_s)
+        urgent = urgent[:cfg.split_max_urgent]
+        B_u = batch_size_bucket(min(len(urgent), mb), mb)
+        if self.predictor.batch_s(family, B_u, bucket,
+                                  strict_warm=True) >= chunk_s:
+            return None
+        urgent_set = set(urgent)
+        rest = [i for i in idxs if i not in urgent_set]
+        return urgent, rest
 
     @staticmethod
     def _selection_for(p: QueryPlan, family: str):
@@ -539,6 +968,8 @@ class SearchService:
             plan=executed, deadline_met=met, queue_wait_s=queue_wait,
             phases=phases, started_at=ex.started_at,
             finished_at=ex.finished_at, deadline_blame=blame,
+            status=STATUS_DEGRADED if p is not None and p.degraded
+            else STATUS_OK,
         )
         ticket.response = resp
         slots[i] = resp

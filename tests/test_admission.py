@@ -1,0 +1,276 @@
+"""Deadline control loop (DESIGN.md §17): admission verdicts, overload
+hysteresis, degraded routing, EDF group splitting, bounded-queue
+shedding, and the never-hangs contract for rejected/shed tickets.
+
+The service-level tests pin predictions by construction instead of by
+measurement: a never-drained service has no ``serve.batch.*`` / compile
+samples, so :class:`StepCostPredictor` falls back to the *unit*
+estimate (``unit_us_per_kslot`` × slots, zero compile penalty) — fully
+deterministic, and linear in both B and the L-bucket, which is exactly
+the lever the scenarios below steer with."""
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.data.corpus import generate_corpus, sample_typed_queries
+from repro.launch.mesh import make_mesh
+from repro.serving import SearchService, ServeConfig
+from repro.serving.admission import (
+    ADMIT,
+    DEGRADE,
+    REASON_NO_BUDGET,
+    REASON_OPTIMISTIC,
+    REJECT_INFEASIBLE,
+    SHED_OVERLOAD,
+    STATUS_DEGRADED,
+    STATUS_REJECTED,
+    STATUS_SHED,
+    AdmissionController,
+)
+
+D = 5
+BUCKETS = (64, 256, 1024)
+
+
+@pytest.fixture(scope="module")
+def world():
+    table, lex = generate_corpus(n_docs=80, mean_doc_len=70, vocab_size=500,
+                                 seed=11)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    idx = build_index(table, lex, max_distance=D)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    queries = (sample_typed_queries(table, lex, 10, "qt5", window=D, seed=3)
+               + sample_typed_queries(table, lex, 10, "qt3", window=D, seed=4))
+    return idx, mesh, queries
+
+
+def _service(idx, mesh, **over):
+    # top_k must not exceed the smallest bucket (the top-k minor dim)
+    over = {"buckets": BUCKETS, "max_batch": 8, "top_k": BUCKETS[0], **over}
+    return SearchService(idx, mesh, ServeConfig(**over))
+
+
+def _compiled_query(svc, queries):
+    for q in queries:
+        if svc.explain(q).is_compiled:
+            return q
+    pytest.skip("no compiled-route query in the sample")
+
+
+def _result_set(resp):
+    return set(zip(resp.results["doc"].tolist(),
+                   resp.results["start"].tolist(),
+                   resp.results["end"].tolist()))
+
+
+# -- 1. infeasible budgets are rejected fast, at submit --------------------
+def test_infeasible_fast_reject(world):
+    idx, mesh, queries = world
+    # unit cost so large every compiled/degraded candidate dwarfs any
+    # millisecond budget; the scalar backstop is not in the candidate
+    # set for a compiled plan
+    svc = _service(idx, mesh, admission=True, unit_us_per_kslot=1e9)
+    q = _compiled_query(svc, queries)
+    t = svc.submit(q, deadline_s=0.01)
+    # resolved at submit: no drain ran, result() does not raise/hang
+    assert t.done
+    resp = t.result()
+    assert resp.status == STATUS_REJECTED
+    assert t.verdict.decision == REJECT_INFEASIBLE
+    assert resp.deadline_met is False
+    assert resp.deadline_blame == "infeasible"
+    assert resp.results["doc"].size == 0
+    st = svc.stats_snapshot()
+    assert st["admission"]["rejected_infeasible"] == 1
+    assert st["deadlines"]["miss_blame"] == {"infeasible": 1}
+    # the rejected ticket is not queued: drain serves nothing
+    assert svc.drain() == []
+
+
+def test_no_budget_requests_always_admit(world):
+    idx, mesh, queries = world
+    svc = _service(idx, mesh, admission=True, unit_us_per_kslot=1e9)
+    q = _compiled_query(svc, queries)
+    t = svc.submit(q)  # no deadline: nothing to enforce
+    assert not t.done
+    assert t.verdict.decision == ADMIT
+    assert t.verdict.reason == REASON_NO_BUDGET
+    (resp,) = svc.drain()
+    assert resp.status == "ok"
+    assert t.result() is resp
+
+
+# -- 2. overload hysteresis: latch, no flap in the dead band ---------------
+def test_hysteresis_latch_under_burst():
+    # alpha=1 -> the EWMA is the raw backlog, so the latch thresholds
+    # are exercised directly; optimism is huge so shedding can only
+    # come from the latch
+    ctrl = AdmissionController(enter_s=0.1, exit_s=0.025, margin=1.0,
+                               optimism=1e9, alpha=1.0)
+    cand = [(None, 0.01)]
+
+    # marginal predicted miss, unlatched -> optimistic admit
+    v = ctrl.consider(cand, backlog_s=0.05, budget_s=0.04)
+    assert v.decision == ADMIT and v.reason == REASON_OPTIMISTIC
+    assert not ctrl.overloaded and ctrl.transitions == 0
+
+    # burst pushes the backlog past enter_s -> latch + shed
+    v = ctrl.consider(cand, backlog_s=0.2, budget_s=0.04)
+    assert v.decision == SHED_OVERLOAD
+    assert ctrl.overloaded and ctrl.transitions == 1
+
+    # dead band (exit < backlog < enter): still latched, still shedding
+    v = ctrl.consider(cand, backlog_s=0.05, budget_s=0.04)
+    assert v.decision == SHED_OVERLOAD
+    assert ctrl.overloaded and ctrl.transitions == 1
+
+    # backlog collapses below exit_s -> unlatch; with no backlog the
+    # request is simply predicted to meet
+    v = ctrl.consider(cand, backlog_s=0.0, budget_s=0.04)
+    assert v.decision == ADMIT and v.reason == "predicted_met"
+    assert not ctrl.overloaded and ctrl.transitions == 2
+
+
+def test_ewma_smooths_drain_sawtooth():
+    # the drain loop empties the queue every cycle: the raw backlog hits
+    # zero between drains, and an unsmoothed latch would flap on it
+    ctrl = AdmissionController(enter_s=0.1, exit_s=0.025, margin=1.0,
+                               optimism=1e9, alpha=0.3)
+    for _ in range(20):
+        ctrl._update_overload(0.2)
+    assert ctrl.overloaded and ctrl.transitions == 1
+    ctrl._update_overload(0.0)  # one drain-boundary zero sample
+    assert ctrl.overloaded, "a single zero backlog must not unlatch"
+    assert ctrl.transitions == 1
+
+
+def test_hysteresis_rejects_inverted_thresholds():
+    with pytest.raises(ValueError):
+        AdmissionController(enter_s=0.01, exit_s=0.05)
+
+
+# -- 3. degraded routing: cheaper bucket, results a subset of full ---------
+def test_degraded_route_results_subset_of_full(world):
+    idx, mesh, queries = world
+    full = _service(idx, mesh)
+    # unit 1e6 us/kslot: a B=1 batch costs ~0.1-1s per bucket step, so a
+    # budget between the degraded and planned bucket costs is wide open
+    # against planning overhead (ms)
+    svc = _service(idx, mesh, admission=True, unit_us_per_kslot=1e6,
+                   admit_margin=1.0, admit_optimism=1.0)
+    for q in queries:
+        p = svc.explain(q)
+        if p.is_compiled and p.bucket > BUCKETS[0] and svc.drain() == []:
+            fr = full.submit(q)
+            full.drain()
+            if _result_set(fr.result()):
+                break
+    else:
+        pytest.skip("no compiled query above the smallest bucket")
+    b_deg = max(b for b in BUCKETS if b < p.bucket)
+    cost_deg = svc.predictor.batch_s(p.step_family, 1, b_deg)
+    cost_full = svc.predictor.batch_s(p.step_family, 1, p.bucket)
+    deadline = 2.0 * cost_deg + 0.05
+    assert deadline < cost_full, "scenario needs a budget only degrade fits"
+
+    t = svc.submit(q, deadline_s=deadline)
+    assert t.verdict.decision == DEGRADE
+    assert t.verdict.bucket == b_deg
+    (resp,) = svc.drain()
+    assert resp.status == STATUS_DEGRADED
+    assert resp.plan.degraded and resp.plan.bucket == b_deg
+    # a truncated posting prefix can only lose matches, never invent them
+    assert _result_set(resp) <= _result_set(fr.result())
+    assert svc.stats_snapshot()["admission"]["degraded"] == 1
+
+
+# -- 4. EDF group splitting is a scheduling move, not a results change -----
+def test_edf_split_results_bit_identical(world):
+    idx, mesh, queries = world
+    svc = _service(idx, mesh, max_batch=4, split_budget=2)
+    ref = _service(idx, mesh, max_batch=4, split_budget=0)
+    qs = [q for q in queries if svc.explain(q).is_compiled][:6]
+    if len(qs) < 3:
+        pytest.skip("not enough compiled queries to form a split group")
+    # deterministic split trigger: predictions grow linearly in B, so a
+    # tight-deadline tail always prefers the small urgent sub-batch
+    # (strict_warm handled by the stub — no cold-shape refusal)
+    svc.predictor.batch_s = lambda family, B, bucket, strict_warm=False: float(B)
+    tickets = [svc.submit(q, deadline_s=0.001 if i < 2 else None)
+               for i, q in enumerate(qs)]
+    got = svc.drain()
+    split_metric = svc.metrics_snapshot("serve.admission.split")
+    assert split_metric["serve.admission.split"] >= 1, "split did not trigger"
+
+    for q in qs:
+        ref.submit(q)
+    want = ref.drain()
+    assert len(got) == len(want) == len(qs)
+    for t, g, w in zip(tickets, got, want):
+        assert t.result() is g
+        for key in g.results:
+            assert np.array_equal(g.results[key], w.results[key]), key
+
+
+# -- 5. bounded queue sheds the infeasible waiter, never the feasible ------
+def test_queue_shed_drops_infeasible_not_feasible(world):
+    idx, mesh, queries = world
+    # optimism huge + latch thresholds out of reach: predicted misses
+    # all admit at the admission step, so overflow pressure lands on
+    # the bounded queue; degrade off keeps every ticket in its planned
+    # group
+    svc = _service(idx, mesh, admission=True, max_batch=2, max_queue=3,
+                   unit_us_per_kslot=1e6, admit_margin=1.0,
+                   admit_optimism=1e9, degrade=False,
+                   shed_enter_s=1e9, shed_exit_s=0.0)
+    q = _compiled_query(svc, queries)
+    p = svc.explain(q)
+    # group cost per B=2 batch; 3 queued same-group tickets = 2 batches
+    c2 = svc.predictor.batch_s(p.step_family, 2, p.bucket)
+
+    t1 = svc.submit(q, deadline_s=100.0)            # FIFO head, feasible
+    t2 = svc.submit(q, deadline_s=100.0)
+    t3 = svc.submit(q, deadline_s=1.5 * c2)         # backlog outruns this
+    t4 = svc.submit(q, deadline_s=100.0)            # overflow trigger
+    assert not t1.done and not t2.done and not t4.done
+    assert t3.done, "the infeasible waiter is the victim"
+    assert t3.result().status == STATUS_SHED
+    assert t3.result().deadline_blame == "shed"
+    st = svc.stats_snapshot()
+    assert st["admission"]["queue_shed"] == 1
+    assert len(svc.drain()) == 3  # t1, t2, t4 all served
+
+
+def test_queue_shed_newcomer_when_all_feasible(world):
+    idx, mesh, queries = world
+    svc = _service(idx, mesh, admission=True, max_batch=2, max_queue=2,
+                   unit_us_per_kslot=1e6, admit_margin=1.0,
+                   admit_optimism=1e9, degrade=False,
+                   shed_enter_s=1e9, shed_exit_s=0.0)
+    q = _compiled_query(svc, queries)
+    t1 = svc.submit(q, deadline_s=100.0)
+    t2 = svc.submit(q, deadline_s=100.0)
+    t3 = svc.submit(q, deadline_s=100.0)  # overflow, everyone feasible
+    assert not t1.done and not t2.done
+    assert t3.done and t3.result().status == STATUS_SHED
+    assert len(svc.drain()) == 2
+
+
+# -- 6. rejected/shed tickets resolve like responses, never hang -----------
+def test_unserved_tickets_resolve_with_full_contract(world):
+    idx, mesh, queries = world
+    svc = _service(idx, mesh, admission=True, unit_us_per_kslot=1e9)
+    q = _compiled_query(svc, queries)
+    t = svc.submit(q, deadline_s=0.005)
+    resp = t.result()  # no drain needed
+    assert resp.status == STATUS_REJECTED
+    assert resp.results["doc"].size == 0
+    assert resp.deadline_met is False
+    assert resp.queue_wait_s >= 0.0
+    assert resp.phases["queue"] == resp.queue_wait_s
+    assert resp.plan is not None and resp.plan.is_compiled
+    # deadline accounting: an unserved deadline'd request is a miss
+    dl = svc.stats_snapshot()["deadlines"]
+    assert dl["missed"] == 1 and dl["met"] == 0
