@@ -20,6 +20,12 @@ rates are host-independent because the offered rate scales with the
 measured capacity of the box, so this check runs even when the two
 files' modes differ.
 
+And the §18 write-path SLO as an *absolute* ceiling: the
+``churn/refresh_p95`` row (benchmarks/churn_bench.py) in a quick-mode
+file must stay under 100 ms — with background compaction a refresh is
+an O(memtable) seal-and-schedule, so a p95 anywhere near the ceiling
+means merges have crept back onto the write path.
+
 Usage:
     python benchmarks/check_serve_regression.py \
         --fresh BENCH_fresh.json --committed BENCH_serve.json [--tolerance 2.5]
@@ -40,6 +46,12 @@ DEFAULT_TOLERANCE = 2.5
 # offered rate scales with the measured capacity of the box)
 CONTROLLED_ROW_PREFIX = "serve/deadline_met_rate_controlled@"
 MET_RATE_FLOOR = 0.95
+# the §18 write-path SLO: with background compaction, refresh() is an
+# O(memtable) seal-and-schedule — its quick-mode p95 (us_per_call of the
+# churn/refresh_p95 row, benchmarks/churn_bench.py) must stay under
+# 100 ms, an absolute ceiling loose enough to be host-independent
+REFRESH_ROW = "churn/refresh_p95"
+REFRESH_P95_CEILING_US = 100_000.0
 
 
 def controlled_met_rates(payload: dict) -> list[tuple[str, float]]:
@@ -68,6 +80,29 @@ def check_met_rate_slo(payload: dict, label: str) -> list[str]:
     return failures
 
 
+def check_refresh_slo(payload: dict, label: str) -> list[str]:
+    """Absolute §18 refresh-latency ceiling on quick-mode churn rows.
+
+    Skips silently when the payload carries no ``churn/refresh_p95`` row
+    (e.g. ``--only serve``) or is not quick mode."""
+    if payload.get("mode") != "quick":
+        return []
+    failures = []
+    for row in payload["rows"]:
+        if row["name"] != REFRESH_ROW:
+            continue
+        p95 = float(row["us_per_call"])
+        ok = p95 <= REFRESH_P95_CEILING_US
+        print(f"{label} {REFRESH_ROW}: p95={p95 / 1e3:.1f}ms "
+              f"ceiling={REFRESH_P95_CEILING_US / 1e3:.0f}ms "
+              f"[{'OK' if ok else 'VIOLATION'}]")
+        if not ok:
+            failures.append(f"{label} {REFRESH_ROW}: refresh p95 "
+                            f"{p95 / 1e3:.1f}ms > "
+                            f"{REFRESH_P95_CEILING_US / 1e3:.0f}ms ceiling")
+    return failures
+
+
 def warm_per_query_us(payload: dict, route: str) -> float | None:
     """The per_query_us of the plain-engine warm drain row for a route."""
     prefix = f"serve/drain_{route}_warm_"
@@ -83,7 +118,9 @@ def check(fresh: dict, committed: dict, tolerance: float) -> list[str]:
     # the absolute met-rate SLO does not need mode-matched files: it
     # judges each file on its own
     failures = (check_met_rate_slo(fresh, "fresh")
-                + check_met_rate_slo(committed, "committed"))
+                + check_met_rate_slo(committed, "committed")
+                + check_refresh_slo(fresh, "fresh")
+                + check_refresh_slo(committed, "committed"))
     if fresh.get("mode") != committed.get("mode"):
         print(f"benchmark modes differ (fresh={fresh.get('mode')!r}, "
               f"committed={committed.get('mode')!r}); guard skipped")

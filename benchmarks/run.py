@@ -13,7 +13,9 @@ Sections:
                 at sustained/overload/bursty offered rates
                 (benchmarks/load_bench.py);
   churn/*     — segmented-index throughput + latency under add/delete/
-                merge churn (repro.index), incl. serve-cache hit rate.
+                merge churn (repro.index) with background compaction and
+                live-memtable serving (§18), incl. serve-cache hit rate,
+                refresh p95, and ingest docs/sec.
 
 Quick mode (default) uses a reduced corpus; --full matches the corpus
 scale used in EXPERIMENTS.md; --smoke is the tiny-corpus CI invocation.
@@ -84,12 +86,16 @@ def main() -> None:
     if want("churn"):
         from benchmarks import churn_bench
 
+        # background + live-memtable serving is the §18 default: refresh
+        # seals and schedules, merges run on the CompactionExecutor
         if args.full:
-            rep = churn_bench.run(serve=True)
+            rep = churn_bench.run(serve=True, background=True, serve_memtable=True)
         elif args.smoke:
-            rep = churn_bench.run(n_docs=150, chunk=40, memtable_docs=24, serve=True)
+            rep = churn_bench.run(n_docs=150, chunk=40, memtable_docs=24, serve=True,
+                                  background=True, serve_memtable=True)
         else:
-            rep = churn_bench.run(n_docs=400, chunk=40, serve=True)
+            rep = churn_bench.run(n_docs=400, chunk=40, serve=True,
+                                  background=True, serve_memtable=True)
         rows += churn_bench.rows(rep)
         reports["churn"] = rep
 

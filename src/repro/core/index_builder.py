@@ -136,7 +136,12 @@ class ProximityIndex:
 
 
 def _group_store(store: PostingStore, keys_sorted: np.ndarray, cols: list[np.ndarray], tuple_keys: bool) -> None:
-    """Slice column arrays into per-key views. keys_sorted is (n, kdim) or (n,)."""
+    """Bulk-register per-key row spans. keys_sorted is (n, kdim) or (n,).
+
+    Registration is O(n keys) dict work via ``PostingStore.put_bulk`` —
+    per-key column slices are cut lazily on first read. This is the seal
+    hot path: a memtable seal's latency is dominated by grouping the
+    (w,v)/(f,s,t) row streams into ~10^5 keys (DESIGN.md §18)."""
     if keys_sorted.size == 0:
         return
     if keys_sorted.ndim == 1:
@@ -145,12 +150,7 @@ def _group_store(store: PostingStore, keys_sorted: np.ndarray, cols: list[np.nda
         change = np.nonzero(np.any(np.diff(keys_sorted, axis=0) != 0, axis=1))[0] + 1
     starts = np.concatenate([[0], change])
     ends = np.concatenate([change, [keys_sorted.shape[0]]])
-    for s, e in zip(starts.tolist(), ends.tolist()):
-        if tuple_keys:
-            key = tuple(int(x) for x in keys_sorted[s])
-        else:
-            key = int(keys_sorted[s])
-        store.put_raw(key, [c[s:e] for c in cols])
+    store.put_bulk(keys_sorted[starts], starts, ends, cols)
 
 
 def _global_positions(table: TokenTable, max_distance: int):

@@ -4,19 +4,24 @@ persistence, tombstone deletes, size-tiered background compaction, and a
 ``ProximityIndex``-compatible merged read facade for live-refresh serving.
 """
 
-from repro.index.compaction import merge_segments, size_tiered_plan
-from repro.index.persist import load_index, save_index
+from repro.index.background import CompactionExecutor, CompactionJob
+from repro.index.compaction import leveled_plan, merge_segments, size_tiered_plan
+from repro.index.persist import load_index, save_index, write_json_atomic
 from repro.index.segment import MemSegment, Segment
 from repro.index.segmented import SegmentedIndex, SegmentedView, snapshot_token
 
 __all__ = [
+    "CompactionExecutor",
+    "CompactionJob",
     "MemSegment",
     "Segment",
     "SegmentedIndex",
     "SegmentedView",
+    "leveled_plan",
     "merge_segments",
     "size_tiered_plan",
     "save_index",
     "load_index",
     "snapshot_token",
+    "write_json_atomic",
 ]

@@ -40,6 +40,23 @@ def size_tiered_plan(segments: list[Segment], fanout: int = 4) -> list[list[int]
     return [idxs for _, idxs in sorted(tiers.items()) if len(idxs) >= fanout]
 
 
+def leveled_plan(segments: list[Segment], fanout: int = 4) -> list[list[int]]:
+    """Leveled policy: a tier may hold at most one run. Any tier holding
+    >= 2 segments merges them all (the output lands in a higher tier), so
+    steady state is <= 1 segment per tier — minimal read amplification at
+    higher write amplification than size-tiering (DESIGN.md §18). Tier
+    assignment reuses the size-tiered bucketing so the two policies are
+    directly comparable."""
+    if fanout < 2:
+        raise ValueError("fanout must be >= 2")
+    tiers: dict[int, list[int]] = {}
+    for i, seg in enumerate(segments):
+        size = max(seg.n_postings, 1)
+        tier = int(np.log(size) / np.log(fanout))
+        tiers.setdefault(tier, []).append(i)
+    return [idxs for _, idxs in sorted(tiers.items()) if len(idxs) >= 2]
+
+
 def _merge_store(
     segments, kind: str, n_columns: int, tomb: np.ndarray, remap, with_prov: bool
 ):
@@ -55,25 +72,42 @@ def _merge_store(
     kdim = 0
     for si, seg in enumerate(segments):
         store = getattr(seg.index, kind)
-        if store is None or not store.counts:
+        if store is None or store.n_keys() == 0:
             continue
-        kp, cp, rp = [], [[] for _ in range(n_columns)], []
-        for k in store.counts:
-            cols = store.columns(k)
-            n = cols[0].size
-            if n == 0:
-                continue
-            krow = np.asarray(k if isinstance(k, tuple) else (k,), np.int64)
-            kdim = krow.size
-            kp.append(np.broadcast_to(krow, (n, kdim)))
-            for ci in range(n_columns):
-                cp[ci].append(cols[ci])
+        bulk = store.bulk_rows()
+        if bulk is not None:
+            # arena-backed store (seal/merge output): all rows are already
+            # one contiguous column set — expand keys by count, no per-key
+            # loop (the merge-throughput hot path, DESIGN.md §18)
+            karr, bstarts, bends, bcols = bulk
+            kdim = karr.shape[1]
+            cnts = bends - bstarts
+            keys = np.repeat(karr, cnts, axis=0)
+            cols = [np.asarray(c).astype(np.int64) for c in bcols]
             if with_prov:
-                rp.append(np.arange(n, dtype=np.int64))
-        if not kp:
-            continue
-        keys = np.concatenate(kp)
-        cols = [np.concatenate(x) for x in cp]
+                rp_all = np.arange(keys.shape[0], dtype=np.int64) - np.repeat(
+                    bstarts, cnts
+                )
+        else:
+            kp, cp, rp = [], [[] for _ in range(n_columns)], []
+            for k in store.counts:
+                cols = store.columns(k)
+                n = cols[0].size
+                if n == 0:
+                    continue
+                krow = np.asarray(k if isinstance(k, tuple) else (k,), np.int64)
+                kdim = krow.size
+                kp.append(np.broadcast_to(krow, (n, kdim)))
+                for ci in range(n_columns):
+                    cp[ci].append(cols[ci])
+                if with_prov:
+                    rp.append(np.arange(n, dtype=np.int64))
+            if not kp:
+                continue
+            keys = np.concatenate(kp)
+            cols = [np.concatenate(x) for x in cp]
+            if with_prov:
+                rp_all = np.concatenate(rp)
         gdoc = seg.doc_map[cols[0]]
         keep = ~isin_sorted(tomb, gdoc)
         if not keep.any():
@@ -86,7 +120,7 @@ def _merge_store(
             col_parts[ci].append(cols[ci])
         if with_prov:
             seg_parts.append(np.full(keys.shape[0], si, np.int32))
-            row_parts.append(np.concatenate(rp)[keep])
+            row_parts.append(rp_all[keep])
 
     out = PostingStore(n_columns=n_columns)
     prov: dict = {}
@@ -105,11 +139,12 @@ def _merge_store(
     change = np.nonzero(np.any(np.diff(keys, axis=0) != 0, axis=1))[0] + 1
     starts = np.concatenate([[0], change])
     ends = np.concatenate([change, [keys.shape[0]]])
-    tuple_keys = kdim > 1
-    for s, e in zip(starts.tolist(), ends.tolist()):
-        key = tuple(int(x) for x in keys[s]) if tuple_keys else int(keys[s, 0])
-        out.put_raw(key, [c[s:e] for c in cols])
-        if with_prov:
+    out_keys = keys[starts, 0] if kdim == 1 else keys[starts]
+    out.put_bulk(out_keys, starts, ends, cols)
+    if with_prov:  # ordinary only: a few hundred lemma keys
+        for key, s, e in zip(out_keys.tolist() if kdim == 1
+                             else map(tuple, keys[starts].tolist()),
+                             starts.tolist(), ends.tolist()):
             prov[key] = (seg_ids[s:e], old_rows[s:e])
     return out, prov
 
@@ -182,4 +217,9 @@ def merge_segments(
         fst=fst,
         doc_lengths=doc_lengths_new,
     )
-    return Segment(segment_id=segment_id, index=index, doc_map=doc_map_new)
+    return Segment(
+        segment_id=segment_id,
+        index=index,
+        doc_map=doc_map_new,
+        derived_from=tuple(s.segment_id for s in segments),
+    )

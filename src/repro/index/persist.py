@@ -14,6 +14,7 @@ prefix per structure, plus a small JSON meta carried by the caller
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 
 import numpy as np
@@ -24,6 +25,17 @@ from repro.core.postings import PostingStore
 
 _KDIM = {"ordinary": 1, "wv": 2, "fst": 3}
 _NCOL = {"ordinary": 2, "wv": 3, "fst": 4}
+
+
+def write_json_atomic(path: str | Path, obj) -> None:
+    """Crash-safe JSON swap: write a sibling tmp file, then ``os.replace``
+    it over the target. Readers observe either the old or the new file,
+    never a truncated one — the manifest-swap primitive the crash-recovery
+    contract of ``SegmentedIndex.save`` rests on (DESIGN.md §18)."""
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(obj))
+    os.replace(tmp, path)
 
 
 def store_to_arrays(store: PostingStore, kind: str) -> dict[str, np.ndarray]:

@@ -28,11 +28,24 @@ from repro.data.corpus import TokenTable
 
 @dataclass(frozen=True, eq=False)  # identity equality: fields hold arrays
 class Segment:
-    """Immutable sealed segment: index over a corpus slice + id mapping."""
+    """Immutable sealed segment: index over a corpus slice + id mapping.
+
+    ``derived_from`` records the *immediate* lineage of a compaction
+    output: the segment_ids of the victims a merge rewrote. Global doc
+    ids are stable across merges, so a segment whose lineage lies
+    entirely inside a snapshot's segment set carries bitwise the same
+    merged reads as its victims did — the invariant the serving pack
+    cache's merge-aware retention rests on (DESIGN.md §18).
+
+    ``is_live`` marks a frozen memtable overlay (``MemSegment.freeze``):
+    an ephemeral pseudo-segment serving unsealed documents inside a
+    ``SegmentedView``; never persisted, never compacted."""
 
     segment_id: int
     index: ProximityIndex
     doc_map: np.ndarray  # (n_local_docs,) int64, strictly increasing global ids
+    derived_from: tuple = ()  # segment_ids of the merge victims, () for seals
+    is_live: bool = False  # frozen memtable overlay, not a durable segment
 
     @property
     def n_docs(self) -> int:
@@ -64,9 +77,12 @@ class Segment:
             "has_wv": self.index.wv is not None,
             "has_fst": self.index.fst is not None,
             "has_nsw": self.index.nsw is not None,
+            "derived_from": list(self.derived_from),
         }
-        (path / "meta.json").write_text(json.dumps(meta))
+        # npz before meta: a dir with meta but no npz is recognizably
+        # partial (crash mid-write) and ignored by the manifest loader
         np.savez(path / "segment.npz", **arrays)
+        (path / "meta.json").write_text(json.dumps(meta))
 
     @classmethod
     def load(cls, path: str | Path, lexicon: Lexicon) -> "Segment":
@@ -81,6 +97,7 @@ class Segment:
             segment_id=int(meta["segment_id"]),
             index=index,
             doc_map=arrays["doc_map"].astype(np.int64),
+            derived_from=tuple(meta.get("derived_from", ())),
         )
 
 
@@ -163,6 +180,27 @@ class MemSegment:
             gids = np.asarray(self._global_ids)
             if not np.all(np.diff(gids) > 0):
                 raise ValueError("global doc ids must be strictly increasing")
+
+    # -- live search -------------------------------------------------------
+    @property
+    def version(self) -> tuple:
+        """Cheap mutation stamp: changes on every absorbed document.
+        ``SegmentedIndex.live_view`` memoizes its frozen overlay on it."""
+        return (len(self._lengths), self._n_tokens)
+
+    def freeze(self) -> Segment | None:
+        """An ephemeral live overlay over the *current* buffer: the same
+        build as :meth:`seal` (bit-identical structures, so merged reads
+        over it match a fresh rebuild), but marked ``is_live`` and keyed
+        by a sentinel segment id — it is never persisted, tiered or
+        compacted, and the memtable keeps absorbing afterwards. Cost is
+        O(buffered tokens); callers memoize per :attr:`version`."""
+        seg = self.seal(segment_id=-1)
+        if seg is None:
+            return None
+        return Segment(
+            segment_id=-1, index=seg.index, doc_map=seg.doc_map, is_live=True
+        )
 
     # -- sealing -----------------------------------------------------------
     def seal(self, segment_id: int) -> Segment | None:

@@ -39,7 +39,8 @@ from repro.core.codecs import zigzag_decode
 from repro.core.lexicon import Lexicon
 from repro.core.postings import ByteMeter
 from repro.data.corpus import TokenTable
-from repro.index.compaction import merge_segments, size_tiered_plan
+from repro.index.background import MERGED, NOOP, SUPERSEDED, CompactionExecutor
+from repro.index.compaction import leveled_plan, merge_segments, size_tiered_plan
 from repro.index.merge import isin_sorted, merged_key_read, merged_nsw_read
 from repro.index.segment import MemSegment, Segment
 
@@ -140,13 +141,24 @@ class SegmentedView:
         max_distance: int,
         n_total_docs: int,
         epoch: int = 0,
+        mem_overlay: Segment | None = None,
     ):
         # identity for external caches: `epoch` is the publisher's refresh
         # counter (human-meaningful), `snapshot_id` is process-unique and
         # never reused — cache keys must use snapshot_id (DESIGN.md §11)
         self.epoch = int(epoch)
         self.snapshot_id = next(_SNAPSHOT_IDS)
-        self.segments = tuple(segments)
+        # `mem_overlay` (DESIGN.md §18) is a frozen memtable pseudo-segment
+        # appended to the read set: live views built by
+        # ``SegmentedIndex.live_view`` make unsealed adds searchable before
+        # any refresh. It participates in every merged read like a sealed
+        # segment but is ephemeral — caches treat overlay views as
+        # uncacheable churn and the planner routes overlay-touching queries
+        # to the scalar executor.
+        self.mem_overlay = mem_overlay
+        self.segments = tuple(segments) + (
+            (mem_overlay,) if mem_overlay is not None else ()
+        )
         self.tombstones = np.sort(np.asarray(tombstones, np.int64))
         self.lexicon = lexicon
         self.max_distance = max_distance
@@ -265,16 +277,24 @@ class SegmentedIndex:
         build_nsw: bool = True,
         memtable_docs: int = 512,
         tier_fanout: int = 4,
+        background: bool = False,
+        policy: str = "size_tiered",
+        executor: CompactionExecutor | None = None,
+        min_compact_interval_s: float = 0.0,
     ):
         if tier_fanout < 2:
             raise ValueError("tier_fanout must be >= 2")
         if memtable_docs < 1:
             raise ValueError("memtable_docs must be >= 1")
+        if policy not in ("size_tiered", "leveled"):
+            raise ValueError(f"unknown compaction policy {policy!r}")
         self.lexicon = lexicon
         self.max_distance = max_distance
         self._flags = dict(build_wv=build_wv, build_fst=build_fst, build_nsw=build_nsw)
         self.memtable_docs = memtable_docs
         self.tier_fanout = tier_fanout
+        self.policy = policy
+        self._plan_fn = size_tiered_plan if policy == "size_tiered" else leveled_plan
         self._segments: list[Segment] = []
         self._tombstones: set[int] = set()
         self._next_doc = 0
@@ -282,7 +302,27 @@ class SegmentedIndex:
         self._mem = self._new_mem()
         self._snapshot: SegmentedView | None = None
         self._epoch = 0
+        # one reentrant lock guards all mutable state; immutable snapshots
+        # are read lock-free. Background swap-ins take the same lock, so a
+        # published view is always a consistent (segments, tombstones) pair
+        self._lock = threading.RLock()
+        self._live_memo: tuple | None = None
+        self.background = bool(background)
+        self._owns_executor = background and executor is None
+        self._executor = (
+            executor
+            if executor is not None
+            else (
+                CompactionExecutor(min_interval_s=min_compact_interval_s)
+                if background
+                else None
+            )
+        )
         self.stats = {"seals": 0, "merges": 0, "docs_added": 0, "docs_deleted": 0}
+
+    @property
+    def executor(self) -> CompactionExecutor | None:
+        return self._executor
 
     def _new_mem(self) -> MemSegment:
         return MemSegment(self.lexicon, max_distance=self.max_distance, **self._flags)
@@ -290,23 +330,25 @@ class SegmentedIndex:
     # -- mutation ----------------------------------------------------------
     def add_document(self, tokens) -> int:
         """Absorb one document; returns its global doc id. The doc becomes
-        searchable after the next refresh()."""
-        gid = self._next_doc
-        self._next_doc += 1
-        self._mem.add_document(gid, tokens)
-        self.stats["docs_added"] += 1
-        if self._mem.n_docs >= self.memtable_docs:
-            self._seal()
+        searchable after the next refresh() (immediately via live_view())."""
+        with self._lock:
+            gid = self._next_doc
+            self._next_doc += 1
+            self._mem.add_document(gid, tokens)
+            self.stats["docs_added"] += 1
+            if self._mem.n_docs >= self.memtable_docs:
+                self._seal()
         return gid
 
     def add_table(self, table: TokenTable) -> np.ndarray:
         """Bulk-load a TokenTable; returns the assigned global doc ids."""
-        gids = np.arange(self._next_doc, self._next_doc + table.n_docs, dtype=np.int64)
-        self._mem.add_table(table, gids)
-        self._next_doc += table.n_docs
-        self.stats["docs_added"] += table.n_docs
-        if self._mem.n_docs >= self.memtable_docs:
-            self._seal()
+        with self._lock:
+            gids = np.arange(self._next_doc, self._next_doc + table.n_docs, dtype=np.int64)
+            self._mem.add_table(table, gids)
+            self._next_doc += table.n_docs
+            self.stats["docs_added"] += table.n_docs
+            if self._mem.n_docs >= self.memtable_docs:
+                self._seal()
         return gids
 
     def delete_document(self, global_id: int) -> None:
@@ -316,52 +358,107 @@ class SegmentedIndex:
         tombstone was purged by compaction) is a no-op — a tombstone no
         segment covers could never be purged again."""
         global_id = int(global_id)
-        if not 0 <= global_id < self._next_doc:
-            raise KeyError(f"unknown doc id {global_id}")
-        if global_id in self._tombstones:
-            return
-        covered = global_id in self._mem._global_ids or any(
-            bool(isin_sorted(seg.doc_map, np.array([global_id])))
-            for seg in self._segments
-        )
-        if not covered:  # already deleted and physically compacted away
-            return
-        self._tombstones.add(global_id)
-        self.stats["docs_deleted"] += 1
+        with self._lock:
+            if not 0 <= global_id < self._next_doc:
+                raise KeyError(f"unknown doc id {global_id}")
+            if global_id in self._tombstones:
+                return
+            covered = global_id in self._mem._global_ids or any(
+                bool(isin_sorted(seg.doc_map, np.array([global_id])))
+                for seg in self._segments
+            )
+            if not covered:  # already deleted and physically compacted away
+                return
+            self._tombstones.add(global_id)
+            self.stats["docs_deleted"] += 1
 
     # -- seal / compact ----------------------------------------------------
-    def _seal(self) -> None:
+    def _seal_only(self) -> bool:
+        """Seal the memtable into a new segment (no compaction). O(memtable)."""
         seg = self._mem.seal(segment_id=self._next_seg)
-        if seg is not None:
-            self._next_seg += 1
-            self._segments.append(seg)
-            self.stats["seals"] += 1
-            self._mem = self._new_mem()
-            self.maybe_compact()
+        if seg is None:
+            return False
+        self._next_seg += 1
+        self._segments.append(seg)
+        self.stats["seals"] += 1
+        self._mem = self._new_mem()
+        return True
+
+    def _seal(self) -> None:
+        """Seal + trigger compaction: inline to fixpoint in foreground
+        mode, a non-blocking schedule in background mode."""
+        if self._seal_only():
+            if self.background:
+                self._executor.schedule(self)
+            else:
+                self.maybe_compact()
 
     def maybe_compact(self) -> int:
-        """Run the size-tiered policy until stable; returns merge count."""
+        """Run the compaction policy inline until stable; returns merge
+        count. (Background mode schedules via the executor instead; this
+        entry point stays inline so forced/major compactions and the
+        foreground path behave exactly as before.)"""
         merges = 0
-        while True:
-            plan = size_tiered_plan(self._segments, self.tier_fanout)
-            if not plan:
-                return merges
-            # merge one group per pass: indices into self._segments go
-            # stale the moment _merge_group mutates the list, so replan
-            self._merge_group(plan[0])
-            merges += 1
+        with self._lock:
+            while True:
+                plan = self._plan_fn(self._segments, self.tier_fanout)
+                if not plan:
+                    return merges
+                # merge one group per pass: indices into self._segments go
+                # stale the moment _merge_group mutates the list, so replan
+                self._merge_group(plan[0])
+                merges += 1
 
     def compact(self, force: bool = False) -> int:
         """force=True merges *all* segments into one (major compaction);
-        otherwise runs the size-tiered policy."""
-        if not force:
-            return self.maybe_compact()
-        if len(self._segments) <= 1 and not (
-            self._segments and self._covered_tombstones(self._segments)
-        ):
-            return 0
-        self._merge_group(list(range(len(self._segments))))
-        return 1
+        otherwise runs the compaction policy inline."""
+        with self._lock:
+            if not force:
+                return self.maybe_compact()
+            if len(self._segments) <= 1 and not (
+                self._segments and self._covered_tombstones(self._segments)
+            ):
+                return 0
+            self._merge_group(list(range(len(self._segments))))
+            return 1
+
+    # -- background protocol (called by CompactionExecutor, DESIGN.md §18) --
+    def _compaction_specs(self) -> list[tuple[list[Segment], np.ndarray, int]]:
+        """Capture merge jobs for the executor: victim Segment objects and
+        the tombstone set *as of now*, plus a pre-allocated output id."""
+        with self._lock:
+            plan = self._plan_fn(self._segments, self.tier_fanout)
+            tomb = np.array(sorted(self._tombstones), np.int64)
+            specs = []
+            for group in plan:
+                victims = [self._segments[i] for i in group]
+                specs.append((victims, tomb, self._next_seg))
+                self._next_seg += 1
+            return specs
+
+    def _apply_merge(self, victims: list[Segment], merged: Segment | None, captured_tomb) -> str:
+        """Atomic swap-in of a background merge. Validates every victim is
+        still live *by identity* (else the job was superseded by an
+        overlapping merge or a dead-segment drop), replaces victims with
+        the output, purges only tombstones that were captured at merge
+        start AND covered by the victims (later deletes keep masking the
+        merged segment at read time — no resurrection), and publishes a
+        fresh snapshot in the same critical section."""
+        with self._lock:
+            live_ids = {id(s) for s in self._segments}
+            if any(id(v) not in live_ids for v in victims):
+                return SUPERSEDED
+            victim_ids = {id(v) for v in victims}
+            survivors = [s for s in self._segments if id(s) not in victim_ids]
+            if merged is not None:
+                survivors.append(merged)
+            self._segments = survivors
+            captured = {int(t) for t in np.asarray(captured_tomb).ravel()}
+            covered = {int(g) for v in victims for g in v.doc_map}
+            self._tombstones -= captured & covered
+            self.stats["merges"] += 1
+            self._publish_locked()
+            return MERGED if merged is not None else NOOP
 
     def _covered_tombstones(self, segs: list[Segment]) -> set[int]:
         covered = set()
@@ -387,23 +484,7 @@ class SegmentedIndex:
         self.stats["merges"] += 1
 
     # -- snapshot / refresh -------------------------------------------------
-    def refresh(self) -> SegmentedView:
-        """Seal the memtable, drop fully-dead segments, run compaction, and
-        publish a new immutable snapshot."""
-        if self._mem.n_docs:
-            self._seal()
-        tomb = np.array(sorted(self._tombstones), np.int64)
-        live = [
-            seg
-            for seg in self._segments
-            if not bool(np.all(isin_sorted(tomb, seg.doc_map)))
-        ]
-        if len(live) != len(self._segments):
-            dropped = [s for s in self._segments if s not in live]
-            self._segments = live
-            for seg in dropped:
-                self._tombstones -= {int(g) for g in seg.doc_map}
-        self.maybe_compact()
+    def _publish_locked(self) -> SegmentedView:
         self._epoch += 1
         self._snapshot = SegmentedView(
             tuple(self._segments),
@@ -415,11 +496,103 @@ class SegmentedIndex:
         )
         return self._snapshot
 
+    def refresh(self, wait: bool | None = None) -> SegmentedView:
+        """Seal the memtable, drop fully-dead segments, and publish a new
+        immutable snapshot.
+
+        ``wait`` controls compaction (default: ``not background``):
+
+        * foreground + ``wait=True`` — the original inline behaviour:
+          compaction runs to fixpoint before the snapshot is published.
+        * ``wait=False`` — seal-only: O(memtable) work, merges are merely
+          *scheduled* in background mode (and skipped in foreground mode);
+          the snapshot publishes immediately and later background swap-ins
+          republish on their own.
+        * background + ``wait=True`` — quiesce: schedule and wait for the
+          executor to drain (re-scheduling until the plan is stable), then
+          return the latest published snapshot.
+        """
+        if wait is None:
+            wait = not self.background
+        with self._lock:
+            if self._mem.n_docs:
+                self._seal_only()
+            tomb = np.array(sorted(self._tombstones), np.int64)
+            live = [
+                seg
+                for seg in self._segments
+                if not bool(np.all(isin_sorted(tomb, seg.doc_map)))
+            ]
+            if len(live) != len(self._segments):
+                dropped = [s for s in self._segments if s not in live]
+                self._segments = live
+                for seg in dropped:
+                    self._tombstones -= {int(g) for g in seg.doc_map}
+            if not self.background and wait:
+                self.maybe_compact()
+            snap = self._publish_locked()
+        if self.background:
+            if wait:
+                # drain-and-replan until stable: a finished merge can push
+                # its output tier over the policy threshold. Guarded by a
+                # progress check so a persistently failing merge (fault
+                # injection, OOM) degrades to "compaction behind" instead
+                # of spinning this loop forever
+                while True:
+                    self._executor.wait_idle()
+                    done0 = self._executor.stats["merged"] + self._executor.stats["noop"]
+                    if not self._executor.schedule(self):
+                        break
+                    self._executor.wait_idle()
+                    if self._executor.stats["merged"] + self._executor.stats["noop"] == done0:
+                        break
+                with self._lock:
+                    snap = self._snapshot  # swap-ins republished under lock
+            else:
+                self._executor.schedule(self)
+        return snap
+
     def snapshot(self) -> SegmentedView:
         """The last published immutable view (publishing one if none yet)."""
-        if self._snapshot is None:
+        snap = self._snapshot
+        if snap is None:
             return self.refresh()
-        return self._snapshot
+        return snap
+
+    def live_view(self) -> SegmentedView:
+        """A searcher view over sealed segments *plus* the unsealed
+        memtable (frozen into an ephemeral overlay segment): adds and
+        deletes are visible immediately, before any refresh. Memoized on
+        (segments identity, memtable version, tombstones), so repeated
+        calls between mutations are O(1); the freeze itself is
+        O(memtable) — same build path as sealing, hence bit-identical
+        reads (DESIGN.md §18)."""
+        with self._lock:
+            key = (
+                tuple(id(s) for s in self._segments),
+                self._mem.version,
+                len(self._tombstones),
+            )
+            if self._live_memo is not None and self._live_memo[0] == key:
+                return self._live_memo[1]
+            overlay = self._mem.freeze()
+            view = SegmentedView(
+                tuple(self._segments),
+                np.array(sorted(self._tombstones), np.int64),
+                self.lexicon,
+                self.max_distance,
+                self._next_doc,
+                epoch=self._epoch,
+                mem_overlay=overlay,
+            )
+            self._live_memo = (key, view)
+            return view
+
+    def close(self) -> None:
+        """Stop the owned background executor (injected executors are the
+        caller's to close). Idempotent."""
+        if self._owns_executor and self._executor is not None:
+            self._executor.close()
 
     @property
     def n_segments(self) -> int:
@@ -467,25 +640,36 @@ class SegmentedIndex:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str | Path) -> None:
+        """Crash-safe layout (DESIGN.md §18): every segment directory is
+        fully written *before* the manifest is swapped in atomically
+        (tmp + ``os.replace``). A crash mid-save leaves either the old
+        manifest (new segment dirs are unreferenced orphans, ignored by
+        ``load``) or the new one (whose segments are all complete) —
+        never a manifest pointing at a partial segment. Holding the lock
+        for the whole save keeps background swap-ins from changing the
+        segment set under the writer."""
+        from repro.index.persist import write_json_atomic
+
         path = Path(path)
         path.mkdir(parents=True, exist_ok=True)
-        if self._mem.n_docs:  # durability: everything buffered gets sealed
-            self._seal()
-        self.lexicon.save(path / "lexicon.json")
-        manifest = {
-            "format_version": 1,
-            "max_distance": self.max_distance,
-            "flags": self._flags,
-            "memtable_docs": self.memtable_docs,
-            "tier_fanout": self.tier_fanout,
-            "next_doc": self._next_doc,
-            "next_seg": self._next_seg,
-            "tombstones": sorted(self._tombstones),
-            "segments": [f"seg_{seg.segment_id:06d}" for seg in self._segments],
-        }
-        for seg in self._segments:
-            seg.save(path / f"seg_{seg.segment_id:06d}")
-        (path / "manifest.json").write_text(json.dumps(manifest))
+        with self._lock:
+            if self._mem.n_docs:  # durability: everything buffered gets sealed
+                self._seal_only()
+            self.lexicon.save(path / "lexicon.json")
+            manifest = {
+                "format_version": 1,
+                "max_distance": self.max_distance,
+                "flags": self._flags,
+                "memtable_docs": self.memtable_docs,
+                "tier_fanout": self.tier_fanout,
+                "next_doc": self._next_doc,
+                "next_seg": self._next_seg,
+                "tombstones": sorted(self._tombstones),
+                "segments": [f"seg_{seg.segment_id:06d}" for seg in self._segments],
+            }
+            for seg in self._segments:
+                seg.save(path / f"seg_{seg.segment_id:06d}")
+            write_json_atomic(path / "manifest.json", manifest)
 
     @classmethod
     def load(cls, path: str | Path) -> "SegmentedIndex":

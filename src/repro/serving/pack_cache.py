@@ -26,13 +26,18 @@ Row kinds (one cache instance can hold any mix; entries are keyed by
 Invalidation rule: entries are valid only for the snapshot they were
 packed against. The cache tracks a single current ``snapshot_token``
 (``repro.index.segmented.snapshot_token``); the first lookup against a
-*different* snapshot invalidates — but after an **add-only** refresh
-(old segment set preserved, tombstones unchanged, doc stride unchanged)
-entries whose key is untouched by the added segments are *retained*
-instead of dropped: the merged rows of an untouched key are bitwise
-identical across such snapshots. Any other transition (compaction,
-deletes, stride growth) clears everything, so a stale row can never be
-served.
+*different* snapshot invalidates — but across a **benign** transition,
+entries whose key no *fresh* segment touches are *retained* instead of
+dropped: the merged rows of an untouched key are bitwise identical
+across such snapshots. Benign covers add-only refreshes (fresh = the
+newly sealed segments), **pure background compactions** (a merge output
+whose ``derived_from`` lineage lies inside the old segment set and whose
+doc set is exactly its victims' minus the old tombstones contributes
+*no* fresh segments — global doc ids are merge-stable, so rows are
+bitwise unchanged; DESIGN.md §18), dead-segment drops, and live memtable
+overlays (fresh = the overlay). Any other transition (new deletes,
+stride growth, unprovable lineage) clears everything, so a stale row can
+never be served.
 
 Bounded by both an entry count and a byte budget (LRU eviction); hits,
 misses, evictions, invalidations, retentions and resident bytes are
@@ -64,6 +69,7 @@ from repro.core.jax_search import (
     pack_wv_key_rows,
     qt1_stride,
 )
+from repro.index.merge import isin_sorted
 from repro.index.segmented import snapshot_token
 from repro.kernels.common import SENTINEL
 
@@ -254,11 +260,12 @@ class PackedPostingCache:
 
     # -- invalidation / cross-snapshot retention --------------------------
     def _retain_or_clear(self, new_index) -> None:
-        """Called under the lock when the snapshot token changes. After an
-        add-only refresh, keep entries whose key no added segment touches;
-        otherwise clear everything."""
-        added = self._addonly_segments(new_index)
-        if added is None:
+        """Called under the lock when the snapshot token changes. When the
+        transition is benign (add-only refresh and/or pure background
+        compaction, DESIGN.md §18), keep entries whose key no *fresh*
+        segment touches; otherwise clear everything."""
+        fresh = self._fresh_segments(new_index)
+        if fresh is None:
             self._entries.clear()
             self._absent.clear()
             self._bytes = 0
@@ -272,7 +279,7 @@ class PackedPostingCache:
                 # range-partition bounds depend on the total doc count
                 stale = doc_shards > 1 and n_docs_changed
                 stale = stale or any(
-                    _key_in_segment(kind, key, seg.index) for seg in added
+                    _key_in_segment(kind, key, seg.index) for seg in fresh
                 )
                 if stale:
                     ent = store.pop(ck)
@@ -281,25 +288,68 @@ class PackedPostingCache:
                 else:
                     self._counts["retained"] += 1
 
-    def _addonly_segments(self, new_index):
-        """The segments added since the cached snapshot, or None when the
-        transition is not add-only (compaction, deletes, stride change,
-        non-segmented index) and the cache must clear."""
+    def _fresh_segments(self, new_index):
+        """Classify the snapshot transition: the list of segments that can
+        make an entry stale (newly sealed segments + live memtable
+        overlays), or None when the transition is not provably benign and
+        the cache must clear.
+
+        The merge-aware rules (DESIGN.md §18) rest on two invariants of
+        ``repro.index``: global doc ids are stable across compactions, and
+        ``merged_key_read`` applies tombstones at read time. A compaction
+        output whose immediate lineage (``Segment.derived_from``) lies
+        inside the old snapshot's segment set — and whose doc set equals
+        exactly its victims' docs minus the *old* tombstones — therefore
+        carries bitwise the same merged rows its victims did, so entries
+        survive it untouched. Any new tombstone, a stride change, a merge
+        that dropped docs the old snapshot still served, or a live old
+        segment vanishing un-merged clears the cache."""
         old = self._token_ref
         if old is None or new_index is old:
             return None
         for view in (old, new_index):
             if not (hasattr(view, "segments") and hasattr(view, "tombstones")):
                 return None
-        old_ids = {id(s) for s in old.segments}
-        new_segs = list(new_index.segments)
-        if not old_ids <= {id(s) for s in new_segs}:
-            return None  # a merge/compaction replaced old segments
-        if not np.array_equal(old.tombstones, new_index.tombstones):
-            return None
+        old_t, new_t = old.tombstones, new_index.tombstones
+        if np.setdiff1d(new_t, old_t).size:
+            return None  # new deletes: keys over those docs went stale
         if qt1_stride(old) != qt1_stride(new_index):
             return None  # a longer doc moved every packed g value
-        return [s for s in new_segs if id(s) not in old_ids]
+        old_overlay = getattr(old, "mem_overlay", None)
+        new_overlay = getattr(new_index, "mem_overlay", None)
+        old_idents, old_by_id = set(), {}
+        for s in old.segments:
+            old_idents.add(id(s))
+            if s is not old_overlay:
+                old_by_id[s.segment_id] = s
+        fresh, covered = [], set()
+        for s in new_index.segments:
+            if id(s) in old_idents:
+                continue  # carried over unchanged (identity)
+            if s is new_overlay or getattr(s, "is_live", False):
+                fresh.append(s)  # overlay stales exactly the keys it holds
+                continue
+            dfrom = set(getattr(s, "derived_from", ()) or ())
+            if dfrom and dfrom <= set(old_by_id):
+                victims = [old_by_id[i] for i in dfrom]
+                want = np.concatenate([v.doc_map for v in victims])
+                want = np.sort(want[~isin_sorted(old_t, want)])
+                if np.array_equal(want, s.doc_map):
+                    covered |= dfrom  # pure compaction: rows bitwise equal
+                    continue
+                return None  # merge dropped docs the old snapshot served
+            fresh.append(s)  # newly sealed (or unprovable lineage)
+        new_idents = {id(s) for s in new_index.segments}
+        for s in old.segments:
+            if id(s) in new_idents or s.segment_id in covered or s is old_overlay:
+                continue
+            if not bool(np.all(isin_sorted(old_t, s.doc_map))):
+                return None  # a live old segment vanished un-merged
+        if old_overlay is not None and id(old_overlay) not in new_idents:
+            # entries packed while an overlay was live may embed its
+            # postings; they are stale exactly where the overlay had keys
+            fresh.append(old_overlay)
+        return fresh
 
     # -- introspection ----------------------------------------------------
     @property

@@ -67,6 +67,9 @@ FB_TOO_MANY_NS_CONSTRAINTS = "too_many_nonstop_constraints"  # QT5: > k_ns
 FB_TOO_MANY_STOP_CONSTRAINTS = "too_many_stop_constraints"   # QT5: > k_st
 FB_STOP_MULTIPLICITY_OVERFLOW = "stop_multiplicity_overflow"  # QT5: r > 254
 FB_ROW_EXCEEDS_LADDER = "row_exceeds_ladder"  # any type: row > largest bucket
+FB_LIVE_MEMTABLE = "live_memtable_key"        # any type: a query lemma lives in
+# the snapshot's unsealed memtable overlay (DESIGN.md §18) — served scalar so
+# the compiled ladder never packs against an ephemeral pre-refresh view
 
 
 @dataclass(frozen=True)
@@ -236,6 +239,20 @@ def plan(request, snapshot, config, costs=None) -> QueryPlan:
     if any(l == UNKNOWN_FL for l in ids):
         return _scalar(None, FB_UNKNOWN_LEMMA)
     qtype = classify(ids, snapshot.lexicon)
+
+    # live-memtable route (DESIGN.md §18): when the snapshot carries an
+    # unsealed-memtable overlay and any query lemma has postings in it,
+    # results depend on pre-refresh documents — the scalar engine reads
+    # the overlay through the same merged-view API bit-identically, while
+    # the compiled ladder would burn pack/compile work on a view that
+    # dies at the next add. A query whose lemmas the overlay cannot
+    # contribute postings to reads the same merged rows with or without
+    # the overlay, so it keeps its compiled route (the same touch
+    # predicate the pack cache uses for staleness).
+    overlay = getattr(snapshot, "mem_overlay", None)
+    if overlay is not None and getattr(config, "scalar_memtable", True):
+        if any(l in overlay.index.ordinary for l in ids):
+            return _scalar(qtype, FB_LIVE_MEMTABLE)
 
     if qtype == QueryType.QT1:
         if snapshot.fst is None:

@@ -115,6 +115,16 @@ class ServeConfig:
     * ``unit_us_per_kslot`` / ``unit_scalar_us`` — the cold-start cost
       fallbacks used before any measured ``serve.step.*`` samples
       exist;
+    * ``serve_memtable`` — refresh() picks up the source's
+      ``live_view()`` (sealed segments + the unsealed memtable as an
+      overlay pseudo-segment, DESIGN.md §18) instead of the last
+      *published* snapshot, making adds/deletes visible to drains
+      without waiting for an index refresh;
+    * ``scalar_memtable`` — route queries whose lemmas the live overlay
+      could contribute postings to through the scalar engine
+      (``FB_LIVE_MEMTABLE``) rather than packing the compiled ladder
+      against an ephemeral view; overlay-untouched queries keep their
+      compiled route either way;
     * ``trace_enabled`` / ``trace_capacity`` — the §15 span tracer (a
       bounded ring of completed spans; disabling reduces the obs
       overhead to the per-phase timestamps);
@@ -138,6 +148,8 @@ class ServeConfig:
     share_buckets: bool = True
     payload_cost_driven: bool = True
     use_pallas: bool = False
+    serve_memtable: bool = False
+    scalar_memtable: bool = True
     default_deadline_s: float | None = None
     admission: bool = False
     max_queue: int | None = None
@@ -456,10 +468,20 @@ class SearchService:
         host-side packing sees the new postings); plans are re-derived
         lazily, and the row caches invalidate themselves on the first
         lookup against the new snapshot — entries are keyed by snapshot
-        identity, and add-only refreshes retain untouched keys
-        (DESIGN.md §12)."""
+        identity, and benign transitions (add-only refreshes, pure
+        background compactions) retain untouched keys (DESIGN.md §12,
+        §18).
+
+        With ``serve_memtable`` the service instead picks the source's
+        ``live_view()`` — sealed segments plus the unsealed memtable as
+        an overlay — so documents are searchable the moment they are
+        added (DESIGN.md §18); the planner routes overlay-touching
+        queries to the scalar engine when ``scalar_memtable`` is set."""
         if self._source is not None:
-            self.index = self._source.snapshot()
+            if self.config.serve_memtable and hasattr(self._source, "live_view"):
+                self.index = self._source.live_view()
+            else:
+                self.index = self._source.snapshot()
             self.stats["refreshes"] += 1
 
     # -- serving -----------------------------------------------------------

@@ -1,0 +1,489 @@
+"""Background compaction + live memtable search (DESIGN.md §18).
+
+The load-bearing property of the real-time ingest tier: a
+``SegmentedIndex`` running merges *off-thread* — with live memtable
+overlays serving unsealed documents — must answer QT1-QT5 bit-identically
+(full (ID, P, E, R) records, modulo the global->compact doc-id remap) to
+a fresh ``build_index`` over the logical corpus, at *every* observable
+point: before any refresh (live view), mid-merge (pinned snapshots),
+after swap-in, after faults, and after crash-recovery reopen.
+
+The differential harness replays randomized add/delete/refresh/search
+interleavings against the fresh-rebuild oracle; the fault-injection hook
+of :class:`repro.index.CompactionExecutor` stalls or kills merges at
+chosen stages to expose torn snapshots, lost tombstones and resurrection
+bugs, and the crash-recovery tests kill a simulated merge between
+segment write and manifest swap.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.search import ProximitySearchEngine
+from repro.data.corpus import TokenTable, generate_corpus
+from repro.index import (
+    CompactionExecutor,
+    SegmentedIndex,
+    leveled_plan,
+    size_tiered_plan,
+    write_json_atomic,
+)
+from repro.obs import MetricsRegistry
+
+D = 5
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    table, lex = generate_corpus(n_docs=120, mean_doc_len=60, vocab_size=400, seed=3)
+    lex.sw_count = 12
+    lex.fu_count = 25
+    return table.to_doc_lists(), lex
+
+
+def _sample_query(ftable, lex, want, seed):
+    rng = np.random.default_rng(seed)
+    sw, fu = lex.sw_count, lex.fu_count
+    for _ in range(3000):
+        r = int(rng.integers(0, ftable.n_rows))
+        d0, p0 = int(ftable.doc_ids[r]), int(ftable.positions[r])
+        m = (ftable.doc_ids == d0) & (np.abs(ftable.positions - p0) <= D)
+        lems = np.unique(ftable.lemma_ids[m])
+        stop = lems[lems < sw]
+        freq = lems[(lems >= sw) & (lems < sw + fu)]
+        ordi = lems[lems >= sw + fu]
+        if want == "qt1" and stop.size >= 3:
+            return sorted(rng.choice(stop, 3, replace=False).tolist())
+        if want == "qt2" and freq.size >= 2:
+            return sorted(rng.choice(freq, 2, replace=False).tolist())
+        if want == "qt3" and ordi.size >= 2:
+            return sorted(rng.choice(ordi, 2, replace=False).tolist())
+        if want == "qt4" and freq.size >= 1 and ordi.size >= 1:
+            return sorted([int(rng.choice(freq)), int(rng.choice(ordi))])
+        if want == "qt5" and stop.size >= 1 and freq.size + ordi.size >= 2:
+            ns = np.concatenate([freq, ordi])
+            return sorted(rng.choice(ns, 2, replace=False).tolist() + [int(rng.choice(stop))])
+    return None
+
+
+def _records(matches, remap=None):
+    docs = matches.doc.tolist()
+    if remap is not None:
+        docs = [remap[int(x)] for x in docs]
+    return sorted(
+        zip(docs, matches.start.tolist(), matches.end.tolist(),
+            np.round(matches.score, 9).tolist())
+    )
+
+
+def _assert_oracle_equiv(view, docs, lex, seed=0, min_qts=3):
+    """Full differential check of one view against a fresh rebuild of its
+    logical corpus: one sampled query per QT, full records bit-identical."""
+    live = view.live_doc_ids()
+    if live.size == 0:
+        return
+    ftable = TokenTable.from_docs([np.array(docs[int(g)], np.int32) for g in live])
+    ref = build_index(ftable, lex, max_distance=D)
+    remap = {int(g): i for i, g in enumerate(live.tolist())}
+    e_view = ProximitySearchEngine(view, top_k=100_000)
+    e_ref = ProximitySearchEngine(ref, top_k=100_000)
+    tested = 0
+    for i, want in enumerate(("qt1", "qt2", "qt3", "qt4", "qt5")):
+        q = _sample_query(ftable, lex, want, seed=seed * 71 + i)
+        if q is None:
+            continue
+        r_ref, _ = e_ref.search_ids(q)
+        r_view, _ = e_view.search_ids(q)
+        assert _records(r_ref) == _records(r_view, remap), (want, q)
+        tested += 1
+    assert tested >= min_qts
+
+
+# -- differential interleaving replay ---------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_interleaving_replay_oracle(corpus, seed):
+    """Randomized add/delete/refresh/search interleavings: the live view
+    (sealed segments + memtable overlay + background merges in flight)
+    must match the fresh-rebuild oracle at every search step."""
+    docs, lex = corpus
+    rng = np.random.default_rng(100 + seed)
+    seg = SegmentedIndex(
+        lex, max_distance=D, memtable_docs=8, tier_fanout=3, background=True
+    )
+    alive, nxt, checks = [], 0, 0
+    try:
+        for step in range(70):
+            op = ["add", "add", "add", "add", "delete", "refresh", "search"][
+                int(rng.integers(7))
+            ]
+            if op == "add" and nxt < len(docs):
+                gid = seg.add_document(docs[nxt])
+                assert gid == nxt  # gids are assigned sequentially
+                alive.append(gid)
+                nxt += 1
+            elif op == "delete" and alive:
+                seg.delete_document(alive.pop(int(rng.integers(len(alive)))))
+            elif op == "refresh":
+                seg.refresh(wait=bool(rng.integers(2)))
+            elif op == "search":
+                _assert_oracle_equiv(seg.live_view(), docs, lex, seed=seed * 13 + step,
+                                     min_qts=0)
+                checks += 1
+        seg.refresh(wait=True)
+        _assert_oracle_equiv(seg.snapshot(), docs, lex, seed=seed)
+        assert checks >= 3
+        assert seg.stats["merges"] >= 1  # the replay actually compacted
+    finally:
+        seg.close()
+
+
+# -- live memtable visibility ------------------------------------------------
+def test_live_view_sees_unsealed_adds(corpus):
+    docs, lex = corpus
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=50, tier_fanout=3)
+    for d in docs[:30]:
+        seg.add_document(d)
+    seg.refresh()
+    for d in docs[30:40]:
+        seg.add_document(d)  # memtable only, no refresh
+    snap = seg.snapshot()
+    live = seg.live_view()
+    assert set(snap.live_doc_ids().tolist()) == set(range(30))
+    assert set(live.live_doc_ids().tolist()) == set(range(40))
+    assert live.mem_overlay is not None and live.mem_overlay.is_live
+    _assert_oracle_equiv(live, docs, lex, seed=7)
+
+
+def test_live_view_sees_unrefreshed_deletes(corpus):
+    docs, lex = corpus
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=50, tier_fanout=3)
+    for d in docs[:30]:
+        seg.add_document(d)
+    seg.refresh()
+    for d in docs[30:36]:
+        seg.add_document(d)
+    seg.delete_document(5)   # sealed doc
+    seg.delete_document(33)  # memtable doc
+    live = seg.live_view()
+    assert set(live.live_doc_ids().tolist()) == set(range(36)) - {5, 33}
+    _assert_oracle_equiv(live, docs, lex, seed=8)
+
+
+def test_live_view_memoized_until_mutation(corpus):
+    docs, lex = corpus
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=50)
+    for d in docs[:10]:
+        seg.add_document(d)
+    v1 = seg.live_view()
+    assert seg.live_view() is v1  # no mutation: same frozen overlay
+    seg.add_document(docs[10])
+    v2 = seg.live_view()
+    assert v2 is not v1
+    seg.delete_document(0)
+    assert seg.live_view() is not v2
+
+
+# -- mid-merge consistency / fault injection ---------------------------------
+def _stalled_world(docs, lex, n_docs=40, stall_stage="before_swap"):
+    """A background index with one merge stalled at ``stall_stage`` until
+    the returned ``hold`` event is set; ``entered`` is set when the merge
+    reaches the stage."""
+    hold, entered = threading.Event(), threading.Event()
+
+    def hook(stage, job):
+        if stage == stall_stage:
+            entered.set()
+            assert hold.wait(30)
+
+    ex = CompactionExecutor(fault_hook=hook)
+    seg = SegmentedIndex(
+        lex, max_distance=D, memtable_docs=8, tier_fanout=3,
+        background=True, executor=ex,
+    )
+    for d in docs[:n_docs]:
+        seg.add_document(d)
+    seg.refresh(wait=False)  # seals + schedules the stalled merge
+    assert entered.wait(30)
+    return seg, ex, hold, entered
+
+
+def test_mid_merge_snapshot_stays_consistent(corpus):
+    """A snapshot pinned while a merge is mid-flight serves bit-identical
+    results; after swap-in the new snapshot does too."""
+    docs, lex = corpus
+    seg, ex, hold, _ = _stalled_world(docs, lex)
+    try:
+        pinned = seg.snapshot()
+        _assert_oracle_equiv(pinned, docs, lex, seed=21)  # mid-merge
+        hold.set()
+        assert ex.wait_idle(30)
+        assert seg.stats["merges"] >= 1
+        post = seg.snapshot()
+        assert post is not pinned  # swap-in republished atomically
+        _assert_oracle_equiv(post, docs, lex, seed=22)
+        _assert_oracle_equiv(pinned, docs, lex, seed=23)  # old pin still valid
+    finally:
+        hold.set()
+        ex.close()
+
+
+def test_late_tombstone_survives_merge(corpus):
+    """A delete arriving while its doc's segment is being merged must not
+    be purged by the swap-in (the capture predates it) — the doc stays
+    masked, never resurrected."""
+    docs, lex = corpus
+    seg, ex, hold, _ = _stalled_world(docs, lex)
+    try:
+        seg.delete_document(0)  # doc 0 is inside the merging tier
+        hold.set()
+        assert ex.wait_idle(30)
+        view = seg.refresh(wait=True)
+        assert 0 not in set(view.live_doc_ids().tolist())
+        assert 0 in set(view.tombstones.tolist())  # survived, not purged
+        _assert_oracle_equiv(view, docs, lex, seed=31)
+    finally:
+        hold.set()
+        ex.close()
+
+
+def test_refresh_seal_only_is_nonblocking(corpus):
+    """refresh(wait=False) must return in O(memtable) time while a merge
+    is still in flight — the inline-merge stall this PR removes."""
+    docs, lex = corpus
+    seg, ex, hold, entered = _stalled_world(docs, lex, stall_stage="before_merge")
+    try:
+        assert entered.is_set() and ex.pending() >= 1
+        for d in docs[40:44]:
+            seg.add_document(d)
+        t0 = time.perf_counter()
+        view = seg.refresh(wait=False)  # merge still stalled: must not block
+        elapsed = time.perf_counter() - t0
+        assert elapsed < 5.0  # seal of a 4-doc memtable; nowhere near a merge stall
+        assert ex.pending() >= 1  # the stalled merge is still in flight
+        assert set(view.live_doc_ids().tolist()) >= set(range(44))
+    finally:
+        hold.set()
+        ex.close()
+
+
+def test_foreground_seal_only_refresh_skips_compaction(corpus):
+    docs, lex = corpus
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=8, tier_fanout=3)
+    for d in docs[:40]:
+        seg.add_document(d)
+    assert seg.stats["merges"] >= 1  # auto-seal compacts inline
+    merges0 = seg.stats["merges"]
+    for d in docs[40:44]:  # stay under memtable_docs: no auto-seal
+        seg.add_document(d)
+    n0 = seg.n_segments
+    seg.refresh(wait=False)
+    assert seg.stats["merges"] == merges0  # seal-only: no merge ran
+    assert seg.n_segments >= n0
+    seg.refresh(wait=True)
+    _assert_oracle_equiv(seg.snapshot(), docs, lex, seed=41)
+
+
+def test_superseded_merge_discarded(corpus):
+    """A background merge whose victims were rewritten underneath it
+    (forced major compaction won the race) is discarded at validation —
+    no duplicate documents, state stays equivalent."""
+    docs, lex = corpus
+    hold, entered = threading.Event(), threading.Event()
+
+    def hook(stage, job):
+        if stage == "before_merge":
+            entered.set()
+            assert hold.wait(30)
+
+    ex = CompactionExecutor(fault_hook=hook)
+    seg = SegmentedIndex(
+        lex, max_distance=D, memtable_docs=100, tier_fanout=3,
+        background=True, executor=ex,
+    )
+    try:
+        # seal manually (no auto-seal scheduling) so we hold the job handle
+        for i, d in enumerate(docs[:40], 1):
+            seg.add_document(d)
+            if i % 8 == 0:
+                with seg._lock:
+                    seg._seal_only()
+        jobs = ex.schedule(seg)
+        assert jobs
+        assert entered.wait(30)
+        seg.compact(force=True)  # inline major compaction rewrites the victims
+        hold.set()
+        assert jobs[0].result(timeout=30) == "superseded"
+        assert ex.stats["superseded"] >= 1
+        view = seg.refresh(wait=True)
+        assert sorted(view.live_doc_ids().tolist()) == list(range(40))  # no dupes
+        _assert_oracle_equiv(view, docs, lex, seed=51)
+    finally:
+        hold.set()
+        ex.close()
+
+
+def test_overlapping_plan_skipped_and_cancel_honored(corpus):
+    docs, lex = corpus
+    seg, ex, hold, _ = _stalled_world(docs, lex, stall_stage="before_merge")
+    try:
+        sched0 = ex.stats["scheduled"]
+        assert ex.schedule(seg) == []  # victims overlap the in-flight job
+        assert ex.stats["scheduled"] == sched0
+        # a cooperatively cancelled queued job resolves without merging
+        for d in docs[40:60]:
+            seg.add_document(d)
+        with seg._lock:
+            seg._seal_only()
+        queued = ex.schedule(seg)
+        for j in queued:
+            j.cancel()
+        hold.set()
+        for j in queued:
+            assert j.result(timeout=30) == "cancelled"
+        assert ex.wait_idle(30)
+    finally:
+        hold.set()
+        ex.close()
+
+
+def test_compaction_metrics_and_spans(corpus):
+    docs, lex = corpus
+    from repro.obs import Tracer
+
+    metrics, tracer = MetricsRegistry(), Tracer()
+    ex = CompactionExecutor(metrics=metrics, tracer=tracer)
+    seg = SegmentedIndex(
+        lex, max_distance=D, memtable_docs=8, tier_fanout=3,
+        background=True, executor=ex,
+    )
+    try:
+        for d in docs[:40]:
+            seg.add_document(d)
+        seg.refresh(wait=True)
+        snap = metrics.snapshot("compaction")
+        assert snap["compaction.scheduled"] >= 1
+        assert snap["compaction.started"] >= 1
+        assert snap["compaction.merged"] >= 1
+        assert snap["compaction.merge_ms"]["count"] >= 1
+        assert ex.stats["merged"] == seg.stats["merges"]
+    finally:
+        ex.close()
+
+
+# -- leveled policy ----------------------------------------------------------
+def test_leveled_plan_merges_multi_run_tiers():
+    class FakeSeg:
+        def __init__(self, n):
+            self.n_postings = n
+
+    segs = [FakeSeg(10), FakeSeg(12), FakeSeg(300), FakeSeg(11), FakeSeg(4000)]
+    # fanout=4 tiers: ~[1, 1, 4, 1, 5] -> tier 1 holds three runs
+    assert size_tiered_plan(segs, fanout=4) == []  # tiering needs 4 per tier
+    lv = leveled_plan(segs, fanout=4)
+    assert lv == [[0, 1, 3]]  # leveled merges any tier holding >= 2 runs
+
+
+def test_leveled_policy_end_to_end(corpus):
+    docs, lex = corpus
+    seg = SegmentedIndex(
+        lex, max_distance=D, memtable_docs=8, tier_fanout=4,
+        background=True, policy="leveled",
+    )
+    try:
+        for d in docs[:60]:
+            seg.add_document(d)
+        for g in (2, 11, 25):
+            seg.delete_document(g)
+        view = seg.refresh(wait=True)
+        # steady state: at most one run per tier
+        tiers = {}
+        for s in view.segments:
+            t = int(np.log(max(s.n_postings, 1)) / np.log(4))
+            tiers[t] = tiers.get(t, 0) + 1
+        assert all(v == 1 for v in tiers.values()), tiers
+        _assert_oracle_equiv(view, docs, lex, seed=61)
+    finally:
+        seg.close()
+
+
+def test_unknown_policy_rejected(corpus):
+    _, lex = corpus
+    with pytest.raises(ValueError):
+        SegmentedIndex(lex, policy="mystery")
+
+
+# -- crash recovery ----------------------------------------------------------
+def test_crash_recovery_ignores_orphan_merge_output(tmp_path, corpus):
+    """Simulated crash between merge-segment write and manifest swap: the
+    reopened index serves exactly the pre-merge state; orphaned segment
+    dirs (complete or partial) are not counted as live."""
+    docs, lex = corpus
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=8, tier_fanout=3)
+    for d in docs[:30]:
+        seg.add_document(d)
+    seg.refresh()
+    seg.save(tmp_path)
+    manifest0 = json.loads((tmp_path / "manifest.json").read_text())
+
+    # the "merge" wrote its output segment dir completely...
+    from repro.index import merge_segments
+
+    merged = merge_segments(
+        seg._segments, np.zeros(0, np.int64), lex, D, segment_id=9999
+    )
+    merged.save(tmp_path / "seg_009999")
+    # ...and another crashed mid-npz (no meta.json yet: recognizably partial)
+    partial = tmp_path / "seg_009998"
+    partial.mkdir()
+    np.savez(partial / "segment.npz", half=np.zeros(3))
+    # ...and the manifest swap died leaving a torn tmp behind
+    (tmp_path / "manifest.json.tmp").write_text('{"segments": ["seg_009999"')
+
+    out = SegmentedIndex.load(tmp_path)
+    assert [s.segment_id for s in out._segments] == [
+        int(name[4:]) for name in manifest0["segments"]
+    ]
+    assert not any(s.segment_id in (9998, 9999) for s in out._segments)
+    view = out.refresh()
+    assert sorted(view.live_doc_ids().tolist()) == list(range(30))
+    _assert_oracle_equiv(view, docs, lex, seed=71)
+
+
+def test_write_json_atomic_swaps_cleanly(tmp_path):
+    target = tmp_path / "m.json"
+    write_json_atomic(target, {"v": 1})
+    assert json.loads(target.read_text()) == {"v": 1}
+    write_json_atomic(target, {"v": 2})
+    assert json.loads(target.read_text()) == {"v": 2}
+    assert not (tmp_path / "m.json.tmp").exists()  # no tmp residue
+
+
+def test_background_roundtrip_preserves_lineage(tmp_path, corpus):
+    """Save/load through background churn: merge outputs carry their
+    ``derived_from`` lineage across the round-trip and the reloaded index
+    is oracle-equivalent."""
+    docs, lex = corpus
+    seg = SegmentedIndex(
+        lex, max_distance=D, memtable_docs=8, tier_fanout=3, background=True
+    )
+    try:
+        for d in docs[:50]:
+            seg.add_document(d)
+        for g in (1, 20):
+            seg.delete_document(g)
+        seg.refresh(wait=True)
+        assert seg.stats["merges"] >= 1
+        assert any(s.derived_from for s in seg._segments)
+        seg.save(tmp_path)
+    finally:
+        seg.close()
+    out = SegmentedIndex.load(tmp_path)
+    assert any(s.derived_from for s in out._segments)
+    lineage = {s.segment_id: s.derived_from for s in seg._segments}
+    assert {s.segment_id: s.derived_from for s in out._segments} == lineage
+    _assert_oracle_equiv(out.refresh(), docs, lex, seed=81)

@@ -144,13 +144,37 @@ def _fallback_cases(idx, lex, queries):
          planner.FB_MULTIPLICITY_OVER_R_MAX, {}),
         ("qt5_stop_overflow", [stop0] * 255 + [ord0], QueryType.QT5,
          planner.FB_STOP_MULTIPLICITY_OVERFLOW, {}),
+        # a query lemma lives in the unsealed-memtable overlay (§18):
+        # compiled caches would churn per add, so the row goes scalar
+        ("live_memtable", queries["qt1"][0], QueryType.QT1,
+         planner.FB_LIVE_MEMTABLE, {"_live_overlay": True}),
     ]
+
+
+def _live_seg(table, lex, q):
+    """A segmented index whose sealed tier is the module corpus and whose
+    unsealed memtable holds one extra doc containing the query lemmas."""
+    from repro.index import SegmentedIndex
+
+    seg = SegmentedIndex(lex, max_distance=D, memtable_docs=1000)
+    for d in table.to_doc_lists():
+        seg.add_document(d)
+    seg.refresh()
+    seg.add_document(list(q) * 2)  # stays in the memtable: overlay-only
+    return seg
 
 
 def test_scalar_fallback_rows(world):
     table, lex, idx, mesh, queries = world
     for name, q, qtype, reason, over in _fallback_cases(idx, lex, queries):
-        svc = _service(idx, mesh, **over)
+        ref = idx
+        if over.pop("_live_overlay", False):
+            seg = _live_seg(table, lex, q)
+            svc = _service(seg, mesh, serve_memtable=True, **over)
+            svc.refresh()  # pulls live_view(): overlay becomes visible
+            ref = seg.live_view()
+        else:
+            svc = _service(idx, mesh, **over)
         p = svc.explain(q)
         assert p.route == planner.ROUTE_SCALAR, (name, p)
         assert p.qtype == qtype, name
@@ -163,7 +187,7 @@ def test_scalar_fallback_rows(world):
         (r,) = svc.drain()
         assert r.path == "cpu" and r.plan == p, name
         assert t.response is r
-        assert _resp_set(r) == _cpu_set(idx, q), name
+        assert _resp_set(r) == _cpu_set(ref, q), name
     # empty requests are their own (inline) dispatch row
     svc = _service(idx, mesh)
     assert svc.explain([]) == QueryPlan(qtype=None, route=planner.ROUTE_EMPTY)

@@ -322,6 +322,79 @@ def test_addonly_retention_drops_touched_entries_only():
     assert np.array_equal(g, pack_fst_key_rows(v2, (3, 4, 5), 256, 1)[0])
 
 
+def test_pure_compaction_retains_all_keys():
+    """A compaction with no intervening deletes is invisible to the cache
+    (DESIGN.md §18): merge outputs whose ``derived_from`` lineage lies in
+    the old snapshot contribute no fresh segments, so *every* warm key is
+    retained and served bitwise-identically."""
+    seg, docs_a, docs_b = _disjoint_vocab_index()
+    for d in docs_a + docs_b:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    assert len(v1.segments) > 1
+    cache = PackedPostingCache()
+    g_a = cache.get_rows(v1, (0, 1, 2), 256, 1)[0]
+    g_b = cache.get_rows(v1, (3, 4, 5), 256, 1)[0]
+    seg.compact(force=True)
+    v2 = seg.refresh()
+    assert len(v2.segments) == 1 and v2.segments[0].derived_from
+    assert cache.get_rows(v2, (0, 1, 2), 256, 1)[0] is g_a
+    assert cache.get_rows(v2, (3, 4, 5), 256, 1)[0] is g_b
+    st = cache.stats
+    assert st["retained"] >= 2 and st["hits"] == 2 and st["misses"] == 2
+    assert np.array_equal(g_a, pack_fst_key_rows(v2, (0, 1, 2), 256, 1)[0])
+
+
+def test_compaction_with_new_deletes_clears():
+    """A delete between the cached snapshot and the merge makes lineage
+    insufficient: the transition clears rather than retain a row whose
+    doc set shrank."""
+    seg, docs_a, docs_b = _disjoint_vocab_index()
+    for d in docs_a + docs_b:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    cache = PackedPostingCache()
+    g_a = cache.get_rows(v1, (0, 1, 2), 256, 1)[0]
+    seg.delete_document(0)  # doc 0 holds the (0,1,2) vocabulary
+    seg.compact(force=True)
+    v2 = seg.refresh()
+    g2 = cache.get_rows(v2, (0, 1, 2), 256, 1)[0]
+    assert g2 is not g_a  # cleared + re-derived, not retained
+    assert cache.stats["retained"] == 0
+    assert np.array_equal(g2, pack_fst_key_rows(v2, (0, 1, 2), 256, 1)[0])
+
+
+def test_live_overlay_stales_touched_keys_only():
+    """Against a live memtable view, only keys the overlay could
+    contribute postings to re-derive; vocabulary the memtable never saw
+    stays retained — and the overlay's own rows are never retained into
+    the next snapshot."""
+    seg, docs_a, docs_b = _disjoint_vocab_index()
+    for d in docs_a:
+        seg.add_document(d)
+    v1 = seg.refresh()
+    cache = PackedPostingCache()
+    g_a = cache.get_rows(v1, (0, 1, 2), 256, 1)[0]
+    for d in docs_b[:3]:  # memtable only (memtable_docs=4): no seal
+        seg.add_document(d)
+    lv = seg.live_view()
+    assert lv.mem_overlay is not None
+    # untouched key: retained into the overlay view, same arrays
+    assert cache.get_rows(lv, (0, 1, 2), 256, 1)[0] is g_a
+    assert cache.stats["retained"] >= 1
+    # overlay-touched key: derived against the live view, matching a
+    # direct pack over it (memtable docs included)
+    g_b_live = cache.get_rows(lv, (3, 4, 5), 256, 1)[0]
+    assert np.array_equal(g_b_live, pack_fst_key_rows(lv, (3, 4, 5), 256, 1)[0])
+    # sealing the memtable replaces the overlay with a real segment: the
+    # overlay-touched entry must not survive into the published snapshot
+    v2 = seg.refresh()
+    g_b_pub = cache.get_rows(v2, (3, 4, 5), 256, 1)[0]
+    assert np.array_equal(g_b_pub, pack_fst_key_rows(v2, (3, 4, 5), 256, 1)[0])
+    # the untouched key is still the original arrays across both hops
+    assert cache.get_rows(v2, (0, 1, 2), 256, 1)[0] is g_a
+
+
 # -- compressed-row cache ---------------------------------------------------
 def test_compressed_cache_rows_match_batch_encoder(world):
     """Per-key compressed rows must reproduce what the whole-batch
