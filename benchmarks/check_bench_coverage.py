@@ -1,0 +1,261 @@
+"""Bench-coverage gate: a generated (or committed) BENCH_serve.json
+must keep one row / report entry per subsystem the serving stack has
+grown — dispatch routes, planner layer, phase observability, nearest-r
+kernels, payload choice, the §17 load control loop, the §18 ingest
+tier, and the §19 autotuner.
+
+This replaces the inline python heredoc the CI workflow used to carry
+(and that tests/test_docs.py partially duplicated): every check lives
+here once, grouped by section name matching ``benchmarks/run.py
+--only`` sections. Checkers return failure-message lists instead of
+raising, so one run reports *every* hole. Pure stdlib, so the lint job
+(no jax) can import it.
+
+  python benchmarks/check_bench_coverage.py --json BENCH_smoke.json \
+      --sections serve,kernel,load,churn,tune
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _names(payload) -> set:
+    return {r["name"] for r in payload["rows"]}
+
+
+def _rows(payload) -> dict:
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def check_serve(payload) -> list[str]:
+    """Dispatch routes + §14 planner layer + §15 phases + §16 payload
+    choice + multi-budget deadline rows (serve_bench)."""
+    f: list[str] = []
+    rep = payload.get("reports", {}).get("serve")
+    if rep is None:
+        return ["serve: no reports.serve section"]
+    names = _names(payload)
+    rows = _rows(payload)
+
+    def need(cond, msg):
+        if not cond:
+            f.append(f"serve: {msg}")
+
+    need("compressed_cache_speedup" in rep.get("drain", {}),
+         "drain report lacks compressed_cache_speedup")
+    need("compressed_cache_speedup" in rep.get("drain_mixed", {}),
+         "drain_mixed report lacks compressed_cache_speedup")
+    for want in ("drain_qt2_", "drain_qt3_", "drain_qt4_", "drain_qt5_",
+                 "drain_mixed_", "deadline_met_rate"):
+        need(any(want in n for n in names), f"no row matching {want!r}")
+    typed = rep.get("drain_typed", {})
+    for key in ("qt3", "qt4", "qt3_compressed", "qt4_compressed"):
+        need({"cold", "warm"} <= typed.get(key, {}).keys(),
+             f"drain_typed[{key!r}] lacks cold/warm")
+    # §14 planner layer: deadline_met_rate + per-route plan stats
+    need({"budget_ms", "met_rate", "n"} <= rep.get("deadline", {}).keys(),
+         "deadline report lacks budget_ms/met_rate/n")
+    plans = rep.get("plans", {})
+    for route in ("qt1", "qt2", "qt34", "qt5", "scalar"):
+        need(route in plans.get("routes", {}), f"no plan route {route!r}")
+    need("executables" in plans and "shared_batches" in plans,
+         "plans report lacks executables/shared_batches")
+    # §15 observability: per-phase p50/p95 rows + deadline blame
+    phases = rep.get("phases", {})
+    for ph in ("queue", "plan", "pack", "compress", "execute", "decode"):
+        row = rows.get(f"serve/phase.{ph}")
+        need(row is not None and "p95_us=" in row["derived"],
+             f"no serve/phase.{ph} row with p95_us")
+        stats = phases.get(ph, {})
+        need(stats.get("p95_us", -1.0) >= stats.get("p50_us", 0.0) >= 0.0,
+             f"phase {ph!r} p50/p95 missing or inverted")
+    need(phases.get("per_request_sum_vs_e2e_max_rel_err", 1.0) < 0.10,
+         "phase tiling error >= 10%")
+    need("serve/deadline_miss_phase" in names, "no deadline_miss_phase row")
+    need("miss_blame" in rep.get("deadline", {}), "no miss_blame attribution")
+    need(plans.get("est_vs_measured"), "est_vs_measured table empty")
+    # §16 cost-driven payload report
+    for want in ("serve/payload_choice_qt3", "serve/payload_choice_qt4",
+                 "serve/payload_choice_qt5"):
+        need(any(n.startswith(want) for n in names), f"no row {want!r}")
+    pc = rep.get("payload_choice", {})
+    for route in ("qt3", "qt4", "qt5"):
+        entry = pc.get(route, {})
+        need(entry.get("warm_ratio_vs_raw_engine", 0.0) > 0.0,
+             f"payload_choice[{route!r}] lacks warm ratio")
+        need(entry.get("chosen_within_5pct_of_alt"),
+             f"payload_choice[{route!r}] chosen payload not within 5% of alt")
+    # §17 multi-budget closed-loop rows
+    for ms in (10, 50, 100):
+        need(f"serve/deadline_met_rate_{ms}ms" in names,
+             f"no deadline_met_rate_{ms}ms row")
+        need(f"{ms}ms" in rep.get("deadline", {}).get("budgets", {}),
+             f"no {ms}ms budget in deadline report")
+    return f
+
+
+def check_kernel(payload) -> list[str]:
+    """§16 nearest-r kernel rows incl. the Pallas interpret spot-check
+    (kernel_bench)."""
+    f: list[str] = []
+    names = _names(payload)
+    for want in ("kernel/nearest_r_ref_", "kernel/nearest_r_count_",
+                 "kernel/nearest_r_pallas_interp_"):
+        if not any(n.startswith(want) for n in names):
+            f.append(f"kernel: no row matching {want!r}")
+    pallas = [r for r in payload["rows"]
+              if r["name"].startswith("kernel/nearest_r_pallas_interp_")]
+    if pallas and "bit_identical_to_ref=1" not in pallas[0]["derived"]:
+        f.append("kernel: pallas interpret row not bit-identical to ref")
+    return f
+
+
+def check_load(payload) -> list[str]:
+    """§17 open-loop control loop: capacity probe + controlled vs
+    uncontrolled met-rates on a shared trace (load_bench)."""
+    f: list[str] = []
+    lrep = payload.get("reports", {}).get("load")
+    if lrep is None:
+        return ["load: no reports.load section"]
+    names = _names(payload)
+    rows = _rows(payload)
+    if not lrep.get("capacity_qps", 0.0) > 0.0:
+        f.append("load: capacity_qps not positive")
+    for want in ("serve/load_capacity_qps",
+                 "serve/deadline_met_rate_controlled@1.5x",
+                 "serve/deadline_met_rate_uncontrolled@1.5x",
+                 "serve/deadline_met_rate_controlled@0.9x-bursty"):
+        if want not in names:
+            f.append(f"load: no row {want!r}")
+    ctl = rows.get("serve/deadline_met_rate_controlled@1.5x")
+    if ctl is not None:
+        for key in ("shed_rate=", "reject_rate=", "goodput_qps="):
+            if key not in ctl["derived"]:
+                f.append(f"load: controlled@1.5x row lacks {key!r}")
+    over = lrep.get("traces", {}).get("poisson@1.5x", {})
+    ctl_met = over.get("controlled", {}).get("met_rate")
+    unc_met = over.get("uncontrolled", {}).get("met_rate")
+    if ctl_met is None or unc_met is None:
+        f.append("load: overload trace lacks controlled/uncontrolled reports")
+    elif ctl_met < unc_met:
+        f.append(f"load: controlled met_rate {ctl_met:.3f} < "
+                 f"uncontrolled {unc_met:.3f} at overload")
+    if "admission" not in over:
+        f.append("load: overload trace lacks admission stats")
+    return f
+
+
+def check_churn(payload) -> list[str]:
+    """§18 ingest tier: churn ran with background compaction +
+    live-memtable serving and at least one off-path merge
+    (churn_bench)."""
+    f: list[str] = []
+    crep = payload.get("reports", {}).get("churn")
+    if crep is None:
+        return ["churn: no reports.churn section"]
+    names = _names(payload)
+    if not (crep.get("background") == 1 and crep.get("serve_memtable") == 1):
+        f.append("churn: not run with background compaction + live memtable")
+    if not crep.get("merges", 0) >= 1:
+        f.append("churn: no merge ran off-path")
+    for want in ("churn/qt1_under_churn", "churn/refresh_p95",
+                 "churn/ingest_docs_per_s"):
+        if want not in names:
+            f.append(f"churn: no row {want!r}")
+    return f
+
+
+TUNE_WORKLOADS = ("zipfian", "longtail", "stopflood", "mixed")
+
+
+def check_tune(payload) -> list[str]:
+    """§19 autotuner: the sweep searched >= 2 MaxDistance values x >= 8
+    serve configs, emitted a winner (config + verdict + sensitivity),
+    and cross-evaluated it vs the default on every named workload
+    (tune_bench)."""
+    f: list[str] = []
+    trep = payload.get("reports", {}).get("tune")
+    if trep is None:
+        return ["tune: no reports.tune section"]
+    rows = _rows(payload)
+    for want in ("tune/sweep_candidates", "tune/best_score",
+                 "tune/best_warm_p50_us"):
+        if want not in rows:
+            f.append(f"tune: no row {want!r}")
+    for name in TUNE_WORKLOADS:
+        row = rows.get(f"tune/p50@{name}")
+        if row is None:
+            f.append(f"tune: no row tune/p50@{name}")
+            continue
+        for key in ("default_p50_us=", "ratio="):
+            if key not in row["derived"]:
+                f.append(f"tune: p50@{name} row lacks {key!r}")
+    space = trep.get("space", {})
+    if len(space.get("max_distances", [])) < 2:
+        f.append(f"tune: swept < 2 MaxDistance values ({space})")
+    if space.get("n_serve_configs", 0) < 8:
+        f.append(f"tune: swept < 8 serve configs ({space})")
+    winner = trep.get("winner", {})
+    for key in ("config_id", "serve_config", "source", "verdict"):
+        if key not in winner:
+            f.append(f"tune: winner report lacks {key!r}")
+    if not trep.get("verdicts"):
+        f.append("tune: no per-config objective verdicts")
+    if not trep.get("sensitivity"):
+        f.append("tune: no sensitivity table")
+    if not trep.get("history"):
+        f.append("tune: no halving history")
+    missing = [w for w in TUNE_WORKLOADS
+               if w not in trep.get("workloads", {})]
+    if missing:
+        f.append(f"tune: workload meta missing {missing}")
+    return f
+
+
+SECTIONS = {
+    "serve": check_serve,
+    "kernel": check_kernel,
+    "load": check_load,
+    "churn": check_churn,
+    "tune": check_tune,
+}
+
+
+def check_payload(payload, sections) -> list[str]:
+    """All failure messages from the named section checkers (empty ==
+    the payload passes)."""
+    failures: list[str] = []
+    for name in sections:
+        checker = SECTIONS.get(name)
+        if checker is None:
+            failures.append(f"unknown section {name!r} "
+                            f"(have {sorted(SECTIONS)})")
+            continue
+        failures += checker(payload)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_smoke.json", metavar="PATH")
+    ap.add_argument("--sections", default=",".join(sorted(SECTIONS)),
+                    help="comma-separated section subset (default: all)")
+    args = ap.parse_args(argv)
+    with open(args.json) as fh:
+        payload = json.load(fh)
+    sections = [s for s in args.sections.split(",") if s]
+    failures = check_payload(payload, sections)
+    if failures:
+        for msg in failures:
+            print(f"FAIL {msg}")
+        return 1
+    print(f"bench coverage OK: {len(_names(payload))} rows, "
+          f"sections {','.join(sections)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,15 @@ file must stay under 100 ms — with background compaction a refresh is
 an O(memtable) seal-and-schedule, so a p95 anywhere near the ceiling
 means merges have crept back onto the write path.
 
+And the §19 autotuner guarantee: every quick-mode ``tune/p50@<workload>``
+row (benchmarks/tune_bench.py) carries the default ServeConfig's warm
+p50 in its derived column (``default_p50_us=``), and the tuned winner
+must never be worse than that default by more than 10% on any workload
+— both numbers come from the *same* run on the *same* host, so unlike
+the cross-host latency ratios this check is tight. (The tuner's
+incumbent fallback makes this structurally satisfiable: when the swept
+winner does not generalize, the emitted config *is* the default.)
+
 Usage:
     python benchmarks/check_serve_regression.py \
         --fresh BENCH_fresh.json --committed BENCH_serve.json [--tolerance 2.5]
@@ -52,6 +61,12 @@ MET_RATE_FLOOR = 0.95
 # 100 ms, an absolute ceiling loose enough to be host-independent
 REFRESH_ROW = "churn/refresh_p95"
 REFRESH_P95_CEILING_US = 100_000.0
+# the §19 autotuner guarantee: a tuned config must never ship worse
+# than the default it was searched against — tuned p50 vs the same-run
+# default p50 (the default_p50_us= field of a tune/p50@<workload> row,
+# benchmarks/tune_bench.py) within 10%, quick mode only
+TUNE_ROW_PREFIX = "tune/p50@"
+TUNE_P50_TOLERANCE = 1.10
 
 
 def controlled_met_rates(payload: dict) -> list[tuple[str, float]]:
@@ -103,6 +118,41 @@ def check_refresh_slo(payload: dict, label: str) -> list[str]:
     return failures
 
 
+def check_tune_slo(payload: dict, label: str) -> list[str]:
+    """Tuned-vs-default p50 guard on quick-mode autotuner rows.
+
+    Each ``tune/p50@<workload>`` row is self-contained (its derived
+    column carries the same-run default p50), so the check applies to
+    the fresh and committed files independently and skips silently when
+    a payload carries no tune rows (e.g. ``--only serve``)."""
+    if payload.get("mode") != "quick":
+        return []
+    failures = []
+    for row in payload["rows"]:
+        if not row["name"].startswith(TUNE_ROW_PREFIX):
+            continue
+        tuned = float(row["us_per_call"])
+        default = None
+        for part in row["derived"].split(";"):
+            if part.startswith("default_p50_us="):
+                default = float(part.split("=", 1)[1])
+        if default is None or default <= 0.0:
+            failures.append(f"{label} {row['name']}: no default_p50_us "
+                            f"in derived ({row['derived']!r})")
+            continue
+        ratio = tuned / default
+        ok = ratio <= TUNE_P50_TOLERANCE
+        print(f"{label} {row['name']}: tuned={tuned:.1f}us "
+              f"default={default:.1f}us ratio={ratio:.3f} "
+              f"tolerance={TUNE_P50_TOLERANCE:.2f} "
+              f"[{'OK' if ok else 'VIOLATION'}]")
+        if not ok:
+            failures.append(f"{label} {row['name']}: tuned p50 "
+                            f"{tuned:.1f}us > {TUNE_P50_TOLERANCE:.2f}x "
+                            f"default {default:.1f}us")
+    return failures
+
+
 def warm_per_query_us(payload: dict, route: str) -> float | None:
     """The per_query_us of the plain-engine warm drain row for a route."""
     prefix = f"serve/drain_{route}_warm_"
@@ -120,7 +170,9 @@ def check(fresh: dict, committed: dict, tolerance: float) -> list[str]:
     failures = (check_met_rate_slo(fresh, "fresh")
                 + check_met_rate_slo(committed, "committed")
                 + check_refresh_slo(fresh, "fresh")
-                + check_refresh_slo(committed, "committed"))
+                + check_refresh_slo(committed, "committed")
+                + check_tune_slo(fresh, "fresh")
+                + check_tune_slo(committed, "committed"))
     if fresh.get("mode") != committed.get("mode"):
         print(f"benchmark modes differ (fresh={fresh.get('mode')!r}, "
               f"committed={committed.get('mode')!r}); guard skipped")

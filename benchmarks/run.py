@@ -15,7 +15,13 @@ Sections:
   churn/*     — segmented-index throughput + latency under add/delete/
                 merge churn (repro.index) with background compaction and
                 live-memtable serving (§18), incl. serve-cache hit rate,
-                refresh p95, and ingest docs/sec.
+                refresh p95, and ingest docs/sec;
+  tune/*      — §19 parameter autotuner: successive-halving sweep of
+                the joint (MaxDistance, ServeConfig) space on the mixed
+                workload, winner cross-evaluated vs the default config
+                on zipfian/longtail/stopflood/mixed traffic and emitted
+                to results/tuned_serve_config.json
+                (benchmarks/tune_bench.py).
 
 Quick mode (default) uses a reduced corpus; --full matches the corpus
 scale used in EXPERIMENTS.md; --smoke is the tiny-corpus CI invocation.
@@ -98,6 +104,13 @@ def main() -> None:
                                   background=True, serve_memtable=True)
         rows += churn_bench.rows(rep)
         reports["churn"] = rep
+
+    if want("tune"):
+        from benchmarks import tune_bench
+
+        tune_rows, tune_rep = tune_bench.run(smoke=args.smoke)
+        rows += tune_rows
+        reports["tune"] = tune_rep
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -11,11 +11,21 @@ deadline control loop (admission verdicts, shedding, EDF splits):
 
   PYTHONPATH=src python -m repro.launch.serve --n-docs 3000 \
       --deadline-ms 50 --admission --load-qps 2000
+
+``--config`` loads a tuned (MaxDistance, ServeConfig) artifact emitted
+by the §19 autotuner (``benchmarks/run.py --only tune``); explicit
+``--deadline-ms`` / ``--admission`` flags still overlay the loaded
+config:
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --config results/tuned_serve_config.json
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import sys
 import time
 
 import numpy as np
@@ -26,13 +36,18 @@ from repro.launch.mesh import make_mesh
 from repro.serving import SearchService, ServeConfig
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-docs", type=int, default=3000)
     ap.add_argument("--requests", type=int, default=512)
     ap.add_argument("--max-distance", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="load a tuned (MaxDistance, ServeConfig) JSON "
+                         "artifact (repro.tune.report); overrides "
+                         "--max-distance/--max-batch/--top-k, while "
+                         "explicit --deadline-ms/--admission still apply")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request budget; responses report deadline_met "
                          "(<= 0 disables deadlines)")
@@ -49,18 +64,49 @@ def main() -> None:
                          "met/shed/reject rates")
     ap.add_argument("--load-duration-s", type=float, default=2.0,
                     help="open-loop trace length (with --load-qps)")
-    args = ap.parse_args()
+    return ap
 
-    table, lex = generate_corpus(args.n_docs, mean_doc_len=160, vocab_size=40_000, seed=1)
-    index = build_index(table, lex, max_distance=args.max_distance)
-    mesh = make_mesh((1, 1), ("data", "model"))
+
+def resolve_config(args) -> tuple[int, ServeConfig]:
+    """(max_distance, ServeConfig) from flags, or from a tuned artifact
+    with explicit deadline/admission flags overlaid on top."""
     deadline_on = args.deadline_ms is not None and args.deadline_ms > 0
+    if args.config is not None:
+        from repro.tune.report import load_serve_config
+
+        max_distance, cfg, meta = load_serve_config(args.config)
+        overlay: dict = {}
+        if args.deadline_ms is not None:
+            overlay["default_deadline_s"] = (
+                args.deadline_ms / 1e3 if deadline_on else None)
+        if args.admission:
+            overlay["admission"] = True
+            if cfg.max_queue is None:
+                overlay["max_queue"] = 4 * cfg.max_batch
+        if overlay:
+            cfg = dataclasses.replace(cfg, **overlay)
+        origin = meta.get("workload", meta.get("bench", "sweep"))
+        print(f"loaded tuned config from {args.config} "
+              f"(max_distance={max_distance}, tuned on {origin!r})",
+              file=sys.stderr)
+        return max_distance, cfg
     cfg = ServeConfig(
         max_batch=args.max_batch, top_k=args.top_k,
         default_deadline_s=args.deadline_ms / 1e3 if deadline_on else None,
         admission=args.admission,
         max_queue=4 * args.max_batch if args.admission else None,
     )
+    return args.max_distance, cfg
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+
+    table, lex = generate_corpus(args.n_docs, mean_doc_len=160, vocab_size=40_000, seed=1)
+    max_distance, cfg = resolve_config(args)
+    index = build_index(table, lex, max_distance=max_distance)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    deadline_on = args.deadline_ms is not None and args.deadline_ms > 0
     service = SearchService(index, mesh, cfg)
     queries = sample_stop_queries(table, lex, args.requests, window=3, seed=2)
 
@@ -71,7 +117,8 @@ def main() -> None:
         arrivals = poisson_arrivals(args.load_qps, args.load_duration_s, seed=2)
         rep = run_open_loop(
             service, queries, arrivals,
-            deadline_s=args.deadline_ms / 1e3 if deadline_on else 0.05,
+            deadline_s=(args.deadline_ms / 1e3 if deadline_on
+                        else cfg.default_deadline_s or 0.05),
             offered_qps=len(arrivals) / args.load_duration_s,
         )
         print(f"open loop: offered {rep.offered_qps:.0f} qps for "
@@ -80,7 +127,7 @@ def main() -> None:
               f"met={rep.met_rate:.3f} shed={rep.shed_rate:.3f} "
               f"reject={rep.reject_rate:.3f}")
         stats = service.stats_snapshot()
-        if args.admission:
+        if cfg.admission:
             print(f"admission: {stats['admission']}")
         if args.trace_out:
             trace = service.write_trace(args.trace_out)

@@ -36,6 +36,17 @@ optimistically (EDF ordering and group splitting often still rescue
 them) until the backlog demonstrably exceeds ``enter_s``, and shedding
 continues until it falls back below ``exit_s``.
 
+**Adaptive reserve (DESIGN.md §19).** The utilization margin the admit
+test applies (``predicted <= margin × budget``) defaults to a
+hand-swept constant, but the error it exists to absorb — work admitted
+later landing ahead of this request — is measurable after the fact:
+``observe_completion(predicted, actual)`` tracks realized
+actual/predicted completion ratios over a recent window, and the
+effective margin becomes ``1 / (q95(error) × safety)``, floored at the
+static value (the cold fallback and the never-less-conservative
+guarantee). A well-calibrated predictor thus admits more of the budget;
+a badly-calibrated one falls back to the hand-swept reserve.
+
 The controller itself is deliberately free of service state: it takes
 the predicted costs and backlog as numbers and returns a verdict, so
 its state machine is unit-testable without a running engine
@@ -44,7 +55,27 @@ its state machine is unit-testable without a running engine
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
+
+# -- adaptive reserve (DESIGN.md §19) ---------------------------------------
+# window of realized actual/predicted completion ratios; samples needed
+# before the adaptive margin is trusted; the error quantile the reserve
+# is derived from; the safety multiplier on that quantile; and how many
+# observations between quantile recomputes (a sort per observation would
+# tax the resolve path for nothing — the window moves slowly)
+MARGIN_WINDOW = 256
+MARGIN_MIN_SAMPLES = 32
+MARGIN_QUANTILE = 0.95
+MARGIN_SAFETY = 1.25
+MARGIN_REFRESH = 8
+
+
+def _quantile(sorted_vals, q: float) -> float:
+    """Nearest-rank quantile of a sorted non-empty sequence."""
+    k = min(len(sorted_vals) - 1,
+            max(0, int(round(q * (len(sorted_vals) - 1)))))
+    return sorted_vals[k]
 
 # -- verdicts (machine-readable, the §17 vocabulary) -----------------------
 ADMIT = "admit"
@@ -110,7 +141,7 @@ class AdmissionController:
 
     def __init__(self, enter_s: float, exit_s: float,
                  margin: float = 0.4, optimism: float = 1.2,
-                 alpha: float = 0.3):
+                 alpha: float = 0.3, adaptive_margin: bool = True):
         if exit_s > enter_s:
             raise ValueError(f"hysteresis requires exit_s <= enter_s "
                              f"(got exit={exit_s}, enter={enter_s})")
@@ -125,7 +156,21 @@ class AdmissionController:
         # groups grow) — an error that scales with the backlog itself,
         # so judging against the full budget systematically over-admits
         # under load. The margin is the reserve that absorbs it.
-        self.margin = margin
+        #
+        # With ``adaptive_margin`` the reserve is *derived* from the
+        # realized error instead of pinned: `observe_completion()` feeds
+        # actual/predicted completion ratios into a bounded window, and
+        # the effective margin becomes 1 / (q95(error) × safety) — "if
+        # predictions run at most q95× optimistic, admitting up to
+        # 1/(q95·safety) of the budget still completes inside it".
+        # The static value stays the floor (never *less* conservative
+        # than the hand-swept reserve) and the cold fallback (below
+        # MARGIN_MIN_SAMPLES observations).
+        self.static_margin = margin
+        self.adaptive_margin = adaptive_margin
+        self._errors: deque = deque(maxlen=MARGIN_WINDOW)
+        self._margin_eff = margin
+        self._since_refresh = 0
         # optimistic-admit bound: a predicted miss is admitted (unlatched
         # state only) when predicted completion <= optimism × the
         # margined budget — marginal misses are often rescued by EDF
@@ -141,6 +186,57 @@ class AdmissionController:
         self.backlog_ewma = 0.0
         self.overloaded = False
         self.transitions = 0  # overload latch flips (flap observability)
+
+    @property
+    def margin(self) -> float:
+        """The effective reserve the admit test uses right now: the
+        static margin while cold (or with ``adaptive_margin=False``),
+        the realized-error-derived value once enough completions have
+        been observed."""
+        return self._margin_eff
+
+    def observe_completion(self, predicted_s: float,
+                          actual_s: float) -> None:
+        """Feed one realized outcome: the ``predicted_e2e_s`` of an
+        admitted verdict vs the actual end-to-end completion of the
+        request it admitted. The ratio actual/predicted is the
+        controller's realized prediction error — the quantity the
+        reserve exists to absorb — tracked over a bounded recent window
+        so the margin follows the prevailing workload."""
+        if predicted_s <= 1e-9 or actual_s < 0.0:
+            return
+        self._errors.append(actual_s / predicted_s)
+        self._since_refresh += 1
+        if self._since_refresh >= MARGIN_REFRESH:
+            self._since_refresh = 0
+            self._margin_eff = self._derive_margin()
+
+    def _derive_margin(self) -> float:
+        if (not self.adaptive_margin
+                or len(self._errors) < MARGIN_MIN_SAMPLES):
+            return self.static_margin
+        q = _quantile(sorted(self._errors), MARGIN_QUANTILE)
+        if q <= 0.0:
+            return self.static_margin
+        # admit up to 1/(q·safety) of the budget: even a q95-pessimal
+        # prediction error, padded by the safety factor, still lands
+        # the request inside the full budget. Floored at the static
+        # reserve, capped at the raw budget.
+        return min(1.0, max(self.static_margin,
+                            1.0 / (q * MARGIN_SAFETY)))
+
+    def margin_stats(self) -> dict:
+        """The realized-error stat surfaced in ``stats["admission"]``:
+        static vs effective margin plus the error window's quantiles."""
+        errs = sorted(self._errors)
+        return {
+            "static": self.static_margin,
+            "effective": self._margin_eff,
+            "adaptive": int(self.adaptive_margin),
+            "n_samples": len(errs),
+            "error_p50": _quantile(errs, 0.5) if errs else None,
+            "error_p95": _quantile(errs, MARGIN_QUANTILE) if errs else None,
+        }
 
     def _update_overload(self, backlog_s: float) -> None:
         self.backlog_ewma += self.alpha * (backlog_s - self.backlog_ewma)

@@ -38,6 +38,14 @@ Integration contract:
 The model is intentionally tiny (dict + EWMA, no locking beyond the
 GIL): it arbitrates between two arms whose measured gap on the routes
 that matter is tens of percent, far beyond EWMA noise.
+
+:class:`RecallCostModel` (DESIGN.md §19) applies the same
+measure-don't-assume move to degraded admits: instead of ordering
+degrade candidates largest-prefix-first (a proxy for least
+degradation), it tracks the measured result-count ratio of each
+degraded (family, bucket) against the family's full route and orders
+candidates by retained recall — with the prefix fraction as the
+unmeasured prior, so a cold model reproduces the old ordering.
 """
 
 from __future__ import annotations
@@ -50,6 +58,12 @@ from repro.serving.planner import PAYLOAD_RAW
 MIN_SAMPLES = 2
 ALPHA = 0.4
 PROBE_EVERY = 16
+
+# recall-cost tracking (degraded admits, DESIGN.md §19): observations
+# per (family, bucket) before a measured recall is trusted over the
+# prefix-fraction prior; EWMA weight
+RECALL_MIN_SAMPLES = 4
+RECALL_ALPHA = 0.3
 
 
 def _arm(payload: str) -> str:
@@ -143,6 +157,95 @@ class StepCostPredictor:
             us = self.config.unit_scalar_us
         out = us * self.config.admission_headroom / 1e6
         self._memo["scalar"] = out
+        return out
+
+
+class RecallCostModel:
+    """Measured recall cost of degraded buckets (DESIGN.md §19).
+
+    A degraded admit serves a *truncated posting prefix*
+    (``planner.degrade``): its results are a subset of the full
+    route's, and how much of the result set a given bucket retains is
+    an empirical property of the posting distribution — not of the
+    prefix fraction alone (hot lemmas front-load their postings in
+    low doc ids; a quarter-length prefix can retain most results).
+    Before this model, the admission controller ordered degrade
+    candidates largest-prefix-first as a proxy for least degradation;
+    this model replaces the proxy with the measured result-count ratio:
+
+    * ``observe_full(family, n)`` — result count of a full-route
+      compiled response (the per-family denominator);
+    * ``observe_degraded(family, bucket, n)`` — result count of a
+      response served from the degraded bucket;
+    * ``recall(family, bucket)`` — EWMA(degraded) / EWMA(full), or
+      None until both sides have ``min_samples`` observations;
+    * ``order(family, buckets, planned_bucket)`` — degrade candidates
+      sorted by estimated retained recall, best first. Unmeasured
+      buckets use the prefix fraction ``bucket / planned_bucket`` as
+      the prior, so a cold model reproduces the old largest-first
+      ordering exactly (the static behaviour stays the fallback)."""
+
+    def __init__(self, min_samples: int = RECALL_MIN_SAMPLES,
+                 alpha: float = RECALL_ALPHA):
+        self.min_samples = min_samples
+        self.alpha = alpha
+        self._full: dict[str, float] = {}       # family -> EWMA count
+        self._full_n: dict[str, int] = {}
+        self._deg: dict[tuple, float] = {}      # (family, bucket) -> EWMA
+        self._deg_n: dict[tuple, int] = {}
+
+    def _ewma(self, table: dict, key, value: float) -> None:
+        prev = table.get(key)
+        table[key] = (value if prev is None
+                      else prev + self.alpha * (value - prev))
+
+    def observe_full(self, family: str, n_results: int) -> None:
+        self._ewma(self._full, family, float(n_results))
+        self._full_n[family] = self._full_n.get(family, 0) + 1
+
+    def observe_degraded(self, family: str, bucket: int,
+                         n_results: int) -> None:
+        key = (family, bucket)
+        self._ewma(self._deg, key, float(n_results))
+        self._deg_n[key] = self._deg_n.get(key, 0) + 1
+
+    def recall(self, family: str, bucket: int) -> float | None:
+        """Measured retained-recall estimate, or None while either side
+        is under-sampled (an ordering must not flap on one batch)."""
+        key = (family, bucket)
+        if (self._deg_n.get(key, 0) < self.min_samples
+                or self._full_n.get(family, 0) < self.min_samples):
+            return None
+        full = self._full.get(family, 0.0)
+        if full <= 0.0:
+            return None
+        return min(1.0, self._deg[key] / full)
+
+    def order(self, family: str, buckets, planned_bucket: int) -> list:
+        """Degrade candidates best-recall-first; measured recall where
+        it exists, the prefix fraction as the prior elsewhere. Ties
+        break to the larger bucket (the superset per request)."""
+        def key(b):
+            r = self.recall(family, b)
+            if r is None:
+                r = b / planned_bucket if planned_bucket > 0 else 0.0
+            return (-r, -b)
+        return sorted(buckets, key=key)
+
+    def table(self) -> dict:
+        """Plain-data snapshot for ``stats["admission"]["recall"]``."""
+        out: dict = {}
+        for (family, bucket), ew in sorted(self._deg.items()):
+            out[f"{family}/L{bucket}"] = {
+                "recall": self.recall(family, bucket),
+                "degraded_ewma_results": ew,
+                "n": self._deg_n[(family, bucket)],
+            }
+        for family, ew in sorted(self._full.items()):
+            out[f"{family}/full"] = {
+                "full_ewma_results": ew,
+                "n": self._full_n[family],
+            }
         return out
 
 

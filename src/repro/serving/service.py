@@ -51,7 +51,11 @@ from repro.serving.executors import (
     empty_results,
     zero_phases,
 )
-from repro.serving.costs import PayloadCostModel, StepCostPredictor
+from repro.serving.costs import (
+    PayloadCostModel,
+    RecallCostModel,
+    StepCostPredictor,
+)
 from repro.serving.pack_cache import PackedPostingCache
 from repro.serving.planner import QueryPlan
 
@@ -110,6 +114,12 @@ class ServeConfig:
       budget (the reserve absorbs work admitted later that lands
       ahead), optimistically up to ``optimism ×`` that bound while not
       latched overloaded;
+    * ``adaptive_margin`` — derive the reserve from the controller's
+      *realized* predicted-vs-actual completion error (recent-quantile
+      tracking, DESIGN.md §19) instead of pinning it at
+      ``admit_margin``; the static value stays the floor and the cold
+      fallback, so a cold or badly-predicting engine is never less
+      conservative than the hand-swept reserve;
     * ``admission_headroom`` — multiplier on every predicted cost
       (measured p50s under-predict the tail the deadline is judged on);
     * ``unit_us_per_kslot`` / ``unit_scalar_us`` — the cold-start cost
@@ -159,6 +169,7 @@ class ServeConfig:
     shed_enter_s: float = 0.100
     shed_exit_s: float = 0.025
     admit_margin: float = 0.4
+    adaptive_margin: bool = True
     admit_optimism: float = 1.2
     admission_headroom: float = 1.3
     unit_us_per_kslot: float = 1.0
@@ -169,6 +180,30 @@ class ServeConfig:
 
     def __post_init__(self):
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+
+    # -- serialization (the §19 tuner's emit/load contract) ----------------
+    def to_json_dict(self) -> dict:
+        """Every knob as plain JSON data (tuples become lists).
+        ``from_json_dict(to_json_dict())`` is the identity — the tuner
+        emits its winning config through this and ``launch/serve.py
+        --config`` loads it back."""
+        d = dataclasses.asdict(self)
+        d["buckets"] = list(self.buckets)
+        return d
+
+    @classmethod
+    def from_json_dict(cls, data: dict) -> "ServeConfig":
+        """Rebuild a config from :meth:`to_json_dict` output. Unknown
+        fields fail loudly: a config artifact naming a knob this build
+        does not have must not silently serve defaults."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise ValueError(f"unknown ServeConfig fields: {unknown}")
+        kw = dict(data)
+        if "buckets" in kw:
+            kw["buckets"] = tuple(kw["buckets"])
+        return cls(**kw)
 
 
 @dataclass
@@ -352,8 +387,16 @@ class SearchService:
         self.admission = (
             AdmissionController(cfg.shed_enter_s, cfg.shed_exit_s,
                                 margin=cfg.admit_margin,
-                                optimism=cfg.admit_optimism)
+                                optimism=cfg.admit_optimism,
+                                adaptive_margin=cfg.adaptive_margin)
             if cfg.admission else None
+        )
+        # measured recall cost of degraded buckets (§19): orders the
+        # degrade candidates the controller judges, best-retained-recall
+        # first (prefix fraction as the cold prior)
+        self.recall_costs = (
+            RecallCostModel()
+            if cfg.admission and cfg.degrade else None
         )
         self._pending: dict[tuple, int] = {}
         self._inflight_until = 0.0
@@ -396,6 +439,8 @@ class SearchService:
                 "rejected_infeasible": 0, "shed_overload": 0,
                 "queue_shed": 0, "expired": 0, "splits": 0,
                 "overload_transitions": 0,
+                "margin": self.admission.margin_stats(),
+                "recall": {},
             }
 
     # -- planning ----------------------------------------------------------
@@ -567,11 +612,20 @@ class SearchService:
                                self.predictor.batch_s(p.step_family, B,
                                                       p.bucket))]
                 if cfg.degrade:
-                    # largest-first below the planned bucket, so "first
-                    # fit" is "least degradation"
+                    # degrade candidates ordered by estimated retained
+                    # recall (measured result-count ratio vs the full
+                    # route, §19), so "first fit" is "least measured
+                    # degradation"; a cold recall model falls back to
+                    # the prefix-fraction prior == largest-first
+                    below = [b for b in cfg.buckets if b < p.bucket]
+                    if self.recall_costs is not None:
+                        below = self.recall_costs.order(
+                            p.step_family, below, p.bucket)
+                    else:
+                        below = sorted(below, reverse=True)
                     candidates += [
                         (b, self.predictor.batch_s(p.step_family, B, b))
-                        for b in reversed(cfg.buckets) if b < p.bucket
+                        for b in below
                     ]
                 # infeasibility is judged on a B=1 batch of the cheapest
                 # candidate route — serving this request *alone*, not
@@ -982,6 +1036,20 @@ class SearchService:
         m.observe("serve.request.e2e", e2e * 1e6)
         if blame is not None:
             m.inc(f"serve.deadline.miss_blame.{blame}")
+        # §19 feedback loops: realized predicted-vs-actual completion
+        # error for the adaptive reserve, and served result counts for
+        # the recall-cost model that orders degrade candidates
+        if (self.admission is not None and ticket.verdict is not None
+                and ticket.verdict.admitted):
+            self.admission.observe_completion(
+                ticket.verdict.predicted_e2e_s, e2e)
+        if self.recall_costs is not None and p.is_compiled:
+            n_res = int(ex.results["doc"].size) if ex.results else 0
+            if p.degraded:
+                self.recall_costs.observe_degraded(p.step_family,
+                                                   p.bucket, n_res)
+            else:
+                self.recall_costs.observe_full(p.step_family, n_res)
         executed = p if ex.payload in (None, p.payload) \
             else dataclasses.replace(p, payload=ex.payload)
         resp = SearchResponse(
@@ -1025,6 +1093,10 @@ class SearchService:
                 st["pack_cache"] = pack_stats
             if comp_stats is not None:
                 st["compressed_cache"] = comp_stats
+            if self.admission is not None:
+                st["admission"]["margin"] = self.admission.margin_stats()
+            if self.recall_costs is not None:
+                st["admission"]["recall"] = self.recall_costs.table()
 
     # -- observability (DESIGN.md §15) -------------------------------------
     def stats_snapshot(self) -> dict:
@@ -1044,6 +1116,10 @@ class SearchService:
             snap["pack_cache"] = self.pack_cache.stats
         if self.compressed_cache is not None:
             snap["compressed_cache"] = self.compressed_cache.stats
+        if self.admission is not None:
+            snap["admission"]["margin"] = self.admission.margin_stats()
+        if self.recall_costs is not None:
+            snap["admission"]["recall"] = self.recall_costs.table()
         return snap
 
     def metrics_snapshot(self, prefix: str = "") -> dict:

@@ -19,6 +19,8 @@ from repro.serving import SearchService, ServeConfig
 from repro.serving.admission import (
     ADMIT,
     DEGRADE,
+    MARGIN_MIN_SAMPLES,
+    MARGIN_SAFETY,
     REASON_NO_BUDGET,
     REASON_OPTIMISTIC,
     REJECT_INFEASIBLE,
@@ -28,6 +30,7 @@ from repro.serving.admission import (
     STATUS_SHED,
     AdmissionController,
 )
+from repro.serving.costs import RecallCostModel
 
 D = 5
 BUCKETS = (64, 256, 1024)
@@ -274,3 +277,135 @@ def test_unserved_tickets_resolve_with_full_contract(world):
     # deadline accounting: an unserved deadline'd request is a miss
     dl = svc.stats_snapshot()["deadlines"]
     assert dl["missed"] == 1 and dl["met"] == 0
+
+
+# -- 7. adaptive admission reserve (DESIGN.md §19) -------------------------
+def _ctl(**over):
+    kw = {"margin": 0.4, **over}
+    return AdmissionController(0.1, 0.025, **kw)
+
+
+def test_adaptive_margin_rises_on_accurate_predictions():
+    ctl = _ctl()
+    assert ctl.margin == 0.4
+    for _ in range(2 * MARGIN_MIN_SAMPLES):
+        ctl.observe_completion(0.010, 0.010)
+    # realized error ~1.0 -> reserve relaxes to 1/safety, above static
+    assert ctl.margin == pytest.approx(1.0 / MARGIN_SAFETY)
+    assert ctl.margin > ctl.static_margin
+
+
+def test_adaptive_margin_floors_at_static_when_predictions_lowball():
+    ctl = _ctl()
+    for _ in range(2 * MARGIN_MIN_SAMPLES):
+        ctl.observe_completion(0.010, 0.030)  # actual 3x the prediction
+    # derived margin 1/(3*safety) < static -> static stays the floor
+    assert ctl.margin == ctl.static_margin == 0.4
+
+
+def test_adaptive_margin_waits_for_min_samples():
+    ctl = _ctl()
+    for _ in range(MARGIN_MIN_SAMPLES - 1):
+        ctl.observe_completion(0.010, 0.010)
+    assert ctl.margin == ctl.static_margin
+
+
+def test_adaptive_margin_disabled_stays_static():
+    ctl = _ctl(adaptive_margin=False)
+    for _ in range(4 * MARGIN_MIN_SAMPLES):
+        ctl.observe_completion(0.010, 0.010)
+    assert ctl.margin == ctl.static_margin
+    assert ctl.margin_stats()["adaptive"] == 0
+
+
+def test_margin_stats_report_realized_error():
+    ctl = _ctl()
+    stats = ctl.margin_stats()
+    assert stats["n_samples"] == 0 and stats["error_p50"] is None
+    for _ in range(2 * MARGIN_MIN_SAMPLES):
+        ctl.observe_completion(0.010, 0.020)
+    stats = ctl.margin_stats()
+    assert stats["error_p50"] == pytest.approx(2.0)
+    assert stats["error_p95"] == pytest.approx(2.0)
+    assert stats["static"] == 0.4
+    assert stats["effective"] == ctl.margin
+    # degenerate observations are ignored, not divided by
+    ctl.observe_completion(0.0, 0.010)
+    ctl.observe_completion(0.010, -1.0)
+    assert ctl.margin_stats()["n_samples"] == stats["n_samples"]
+
+
+# -- 8. recall-cost degrade ordering (DESIGN.md §19) -----------------------
+def test_recall_model_cold_order_is_largest_first():
+    rc = RecallCostModel()
+    assert rc.order("qt5", [64, 1024, 256], 4096) == [1024, 256, 64]
+    assert rc.recall("qt5", 256) is None
+
+
+def test_recall_model_warm_order_prefers_measured_recall():
+    rc = RecallCostModel(min_samples=2)
+    for _ in range(3):
+        rc.observe_full("qt5", 100)
+        rc.observe_degraded("qt5", 64, 90)    # tiny prefix, high recall
+        rc.observe_degraded("qt5", 1024, 30)  # big prefix, low recall
+    assert rc.recall("qt5", 64) == pytest.approx(0.9)
+    # 256 unmeasured -> prefix prior 256/4096; measured recalls win
+    assert rc.order("qt5", [64, 1024, 256], 4096) == [64, 1024, 256]
+    table = rc.table()
+    assert table["qt5/L64"]["recall"] == pytest.approx(0.9)
+    assert table["qt5/full"]["n"] == 3
+
+
+def test_recall_model_clamps_and_undersamples():
+    rc = RecallCostModel(min_samples=2)
+    for _ in range(2):
+        rc.observe_full("qt3", 10)
+        rc.observe_degraded("qt3", 64, 25)  # noisy count above the full
+    assert rc.recall("qt3", 64) == 1.0  # clamped: recall cannot exceed 1
+    rc.observe_degraded("qt3", 256, 5)
+    assert rc.recall("qt3", 256) is None  # one sample is not evidence
+
+
+def test_service_degrade_picks_highest_measured_recall(world):
+    idx, mesh, queries = world
+    svc = _service(idx, mesh, buckets=(16, 64, 256), top_k=16,
+                   admission=True, unit_us_per_kslot=1e6,
+                   admit_margin=1.0, admit_optimism=1.0)
+    for q in queries:
+        p = svc.explain(q)
+        if p.is_compiled and p.bucket == 256:
+            break
+    else:
+        pytest.skip("no compiled query planned at the top bucket")
+    # rig measured recalls so the SMALLEST prefix retains the most
+    # results — the opposite of the prefix-fraction prior
+    for _ in range(svc.recall_costs.min_samples):
+        svc.recall_costs.observe_full(p.step_family, 100)
+        svc.recall_costs.observe_degraded(p.step_family, 16, 95)
+        svc.recall_costs.observe_degraded(p.step_family, 64, 20)
+    cost_64 = svc.predictor.batch_s(p.step_family, 1, 64)
+    cost_full = svc.predictor.batch_s(p.step_family, 1, p.bucket)
+    deadline = 2.0 * cost_64 + 0.05
+    assert deadline < cost_full, "scenario needs a degrade-only budget"
+    t = svc.submit(q, deadline_s=deadline)
+    # the old largest-first policy would pick 64; measured recall says 16
+    assert t.verdict.decision == DEGRADE
+    assert t.verdict.bucket == 16
+    (resp,) = svc.drain()
+    assert resp.plan.degraded and resp.plan.bucket == 16
+
+
+def test_service_snapshot_exposes_margin_and_recall(world):
+    idx, mesh, queries = world
+    svc = _service(idx, mesh, admission=True)
+    q = _compiled_query(svc, queries)
+    svc.submit(q, deadline_s=30.0)
+    svc.drain()
+    adm = svc.stats_snapshot()["admission"]
+    # served admits feed the realized-error window...
+    assert adm["margin"]["n_samples"] >= 1
+    assert adm["margin"]["static"] == ServeConfig().admit_margin
+    assert adm["margin"]["error_p50"] > 0.0
+    # ...and full-route completions feed the recall denominators
+    full_keys = [k for k in adm["recall"] if k.endswith("/full")]
+    assert full_keys, adm["recall"]

@@ -1,0 +1,257 @@
+"""Autotuner subsystem tests (DESIGN.md §19): workload generators are
+deterministic and honor their declared mixes, traces record/replay
+bit-identically, successive halving never drops a known-best candidate
+on a rigged cost table, and the emitted ServeConfig artifact
+round-trips through ``launch/serve.py --config`` loading."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.index_builder import build_index
+from repro.core.query import QueryType, classify
+from repro.data.corpus import generate_corpus
+from repro.launch.mesh import make_mesh
+from repro.serving import SearchService, ServeConfig
+from repro.tune import (
+    Candidate,
+    Objective,
+    WORKLOAD_GENERATORS,
+    attach_arrivals,
+    emit_serve_config,
+    estimate_workload_us,
+    grid,
+    load_serve_config,
+    load_workload,
+    make_workload,
+    mixed_workload,
+    record_workload,
+    stopword_flood,
+    successive_halving,
+    sweep,
+    zipfian_workload,
+)
+
+D = 5
+BUCKETS = (64, 256, 1024)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    table, lex = generate_corpus(n_docs=60, mean_doc_len=60, vocab_size=400,
+                                 seed=7)
+    lex.sw_count = 14
+    lex.fu_count = 30
+    return table, lex
+
+
+@pytest.fixture(scope="module")
+def served(corpus):
+    table, lex = corpus
+    idx = build_index(table, lex, max_distance=D)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return idx, mesh
+
+
+# -- workload generators ----------------------------------------------------
+def test_generators_deterministic_per_seed(corpus):
+    table, lex = corpus
+    for name in WORKLOAD_GENERATORS:
+        a = make_workload(name, table, lex, 16, seed=5)
+        b = make_workload(name, table, lex, 16, seed=5)
+        assert a.queries == b.queries, name
+        c = make_workload(name, table, lex, 16, seed=6)
+        assert a.queries != c.queries, f"{name}: seed has no effect"
+
+
+def test_zipfian_head_heavy(corpus):
+    table, lex = corpus
+    wl = zipfian_workload(table, lex, 64, alpha=2.0, seed=3)
+    mean_id = sum(l for q in wl.queries for l in q) / sum(
+        len(q) for q in wl.queries)
+    # frequency-rank draws with alpha=2 concentrate far above the
+    # uniform mean rank (~vocab/2)
+    assert mean_id < lex.n_lemmas / 4, mean_id
+    assert all(len(set(q)) == len(q) for q in wl.queries)
+
+
+def test_stopflood_is_all_qt1(corpus):
+    _, lex = corpus
+    wl = stopword_flood(lex, 32, seed=4)
+    assert all(classify(q, lex) == QueryType.QT1 for q in wl.queries)
+    assert wl.meta["type_mix"] == {"qt1": 1.0}
+    assert all(l < lex.sw_count for q in wl.queries for l in q)
+
+
+def test_mixed_workload_honors_declared_mix(corpus):
+    table, lex = corpus
+    wl = mixed_workload(table, lex, 20, mix={"qt1": 1.0, "qt3": 3.0},
+                        window=D, seed=9)
+    assert wl.meta["declared_counts"] == {"qt1": 5, "qt3": 15}
+    assert len(wl) == 20
+    mix = wl.type_mix(lex)
+    # the samplers build queries *of the requested type*, so the
+    # measured mix matches the declared one
+    assert mix.get("qt1", 0.0) == pytest.approx(0.25)
+    assert mix.get("qt3", 0.0) == pytest.approx(0.75)
+
+
+def test_mixed_workload_rejects_bad_mix(corpus):
+    table, lex = corpus
+    with pytest.raises(ValueError):
+        mixed_workload(table, lex, 8, mix={"qt9": 1.0})
+    with pytest.raises(ValueError):
+        mixed_workload(table, lex, 8, mix={"qt1": 0.0})
+
+
+def test_record_replay_bit_identical(tmp_path, corpus):
+    table, lex = corpus
+    wl = attach_arrivals(
+        make_workload("mixed", table, lex, 12, seed=2),
+        "poisson", qps=50.0, duration_s=0.2, seed=3)
+    path = tmp_path / "trace.json"
+    record_workload(wl, str(path))
+    back = load_workload(str(path))
+    assert back.name == wl.name
+    assert back.queries == wl.queries
+    assert back.arrivals == wl.arrivals
+    assert back.meta == wl.meta
+    # and a second round trip is byte-identical (pure-JSON payload)
+    path2 = tmp_path / "trace2.json"
+    record_workload(back, str(path2))
+    assert path.read_text() == path2.read_text()
+
+
+def test_load_workload_rejects_foreign_json(tmp_path):
+    path = tmp_path / "other.json"
+    path.write_text(json.dumps({"format": "something-else"}))
+    with pytest.raises(ValueError):
+        load_workload(str(path))
+
+
+# -- successive halving -----------------------------------------------------
+def test_halving_never_drops_known_best():
+    # rigged cost table: candidate "best" is cheapest at every rung;
+    # every other cost permutes per rung to shake the ordering
+    cands = [f"c{i}" for i in range(16)] + ["best"]
+    rungs = [
+        lambda c, r=r: 0.0 if c == "best" else (hash((c, r)) % 97) + 1.0
+        for r in range(3)
+    ]
+    history = successive_halving(cands, rungs, keep=(8, 4))
+    assert [len(rung) for rung in history] == [17, 8, 4]
+    assert history[-1][0][0] == "best"
+    for rung in history:
+        assert any(c == "best" for c, _ in rung), "best was dropped"
+
+
+def test_halving_keep_floors_and_bounds():
+    cands = list("abc")
+    rungs = [lambda c: ord(c), lambda c: ord(c)]
+    history = successive_halving(cands, rungs, keep=(1,), min_keep=2)
+    assert len(history[1]) == 2  # min_keep floors the cut
+    history = successive_halving(cands, rungs, keep=(99,))
+    assert len(history[1]) == 3  # keep clamped to the field
+
+
+def test_grid_covers_product_with_unique_ids():
+    cands = grid((3, 5), {
+        "r_max": [2, 4],
+        "k": [{"k_ns": 2, "k_st": 2}, {"k_ns": 3, "k_st": 3}],
+    })
+    assert len(cands) == 8
+    ids = {c.config_id for c in cands}
+    assert len(ids) == 8
+    multi = cands[0].serve_config()
+    assert multi.k_ns == dict(cands[0].overrides)["k_ns"]
+
+
+# -- ServeConfig serialization + artifact round trip ------------------------
+def test_serve_config_json_round_trip():
+    cfg = ServeConfig(max_batch=8, buckets=(64, 256), top_k=32, r_max=2,
+                      admission=True, max_queue=32, admit_margin=0.7)
+    back = ServeConfig.from_json_dict(cfg.to_json_dict())
+    assert back == cfg
+    with pytest.raises(ValueError):
+        ServeConfig.from_json_dict({"no_such_knob": 1})
+
+
+def test_emitted_artifact_loads_through_launch_serve(tmp_path):
+    from repro.launch.serve import build_parser, resolve_config
+
+    cfg = ServeConfig(max_batch=16, top_k=8, r_max=2)
+    path = tmp_path / "tuned.json"
+    emit_serve_config(str(path), 3, cfg, meta={"workload": "mixed"})
+    d, back, meta = load_serve_config(str(path))
+    assert (d, back, meta["workload"]) == (3, cfg, "mixed")
+
+    args = build_parser().parse_args(["--config", str(path)])
+    d2, cfg2 = resolve_config(args)
+    assert (d2, cfg2) == (3, cfg)
+    # explicit flags overlay the loaded artifact
+    args = build_parser().parse_args(
+        ["--config", str(path), "--admission", "--deadline-ms", "25"])
+    _, cfg3 = resolve_config(args)
+    assert cfg3.admission and cfg3.default_deadline_s == pytest.approx(0.025)
+    assert cfg3.max_queue == 4 * cfg.max_batch
+    assert dataclasses.replace(cfg3, admission=False, max_queue=None,
+                               default_deadline_s=None) == cfg
+
+
+def test_load_serve_config_rejects_foreign_json(tmp_path):
+    path = tmp_path / "other.json"
+    path.write_text(json.dumps({"format": "not-a-config"}))
+    with pytest.raises(ValueError):
+        load_serve_config(str(path))
+
+
+# -- objective --------------------------------------------------------------
+def test_objective_verdict_shape_and_miss_penalty():
+    obj = Objective(deadline_s=0.05, target_met_rate=0.99)
+    base = {"p50_us": 1000.0, "p95_us": 2000.0, "met_rate_offered": 1.0,
+            "index_bytes": 2 << 20}
+    good = obj.score(base, config_id="a")
+    assert good["config_id"] == "a" and good["met_target_ok"]
+    assert good["score"] == pytest.approx(
+        sum(good["components"].values()))
+    bad = obj.score({**base, "met_rate_offered": 0.5}, config_id="b")
+    assert not bad["met_target_ok"]
+    assert bad["score"] > good["score"]
+    # a bigger index must never score better, all else equal
+    big = obj.score({**base, "index_bytes": 200 << 20}, config_id="c")
+    assert big["score"] > good["score"]
+
+
+# -- estimate + sweep against a real service --------------------------------
+def test_estimate_workload_us_positive_and_config_sensitive(served, corpus):
+    idx, mesh = served
+    table, lex = corpus
+    wl = make_workload("mixed", table, lex, 12, window=D, seed=13)
+    svc = SearchService(idx, mesh, ServeConfig(buckets=BUCKETS, max_batch=8,
+                                               top_k=BUCKETS[0]))
+    est = estimate_workload_us(svc, wl.queries)
+    assert est > 0.0
+    # the unit cost model scales with unit_us_per_kslot, so the
+    # estimate must too (that is what makes rung 0 discriminating)
+    svc2 = SearchService(idx, mesh, ServeConfig(buckets=BUCKETS, max_batch=8,
+                                                top_k=BUCKETS[0],
+                                                unit_us_per_kslot=10.0))
+    assert estimate_workload_us(svc2, wl.queries) > est
+
+
+def test_sweep_end_to_end_tiny(served, corpus):
+    idx, mesh = served
+    table, lex = corpus
+    wl = make_workload("mixed", table, lex, 8, window=D, seed=17)
+    base = ServeConfig(buckets=BUCKETS, max_batch=8, top_k=BUCKETS[0])
+    cands = [Candidate(D, axis_values=(("config", "default"),)),
+             Candidate(D, overrides=(("r_max", 2),))]
+    out = sweep({D: idx}, mesh, cands, wl, base=base,
+                objective=Objective(deadline_s=0.5))
+    assert out.winner in cands
+    assert out.n_candidates == 2
+    assert len(out.history) == 2  # estimate rung + one measured rung
+    assert out.winner_verdict["config_id"] == out.winner.config_id
+    assert out.verdicts and all("score" in v for v in out.verdicts)
+    assert out.measurements[out.winner.config_id]["p50_us"] > 0.0
